@@ -1,0 +1,63 @@
+"""Allocator ablation (paper greedy vs exact local search vs waterfill) and
+the stage-balance benchmark on the TPU mesh (the paper's flexibility claim
+ported: uniform stage assignment vs Algorithm-1 boundaries)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCHS
+from repro.core import throughput as T
+from repro.core import workload as W
+from repro.core.allocator import (allocate_compute, plan_pipeline,
+                                  _partition_min_max)
+from repro.core.workload import lm_layer_workloads
+
+
+def run_objectives(emit):
+    print("\n== Allocator objective ablation (900 DSPs, 16-bit) ==")
+    print(f"{'model':9s} {'paper':>7s} {'exact':>7s} {'optimal':>8s}")
+    for model, fn in W.CNN_MODELS.items():
+        layers = fn().layer_workloads(weight_bits=16)
+        effs = {}
+        for obj in ("paper", "exact", "optimal"):
+            t0 = time.time()
+            allocs = allocate_compute(layers, 900, objective=obj)
+            us = (time.time() - t0) * 1e6
+            effs[obj] = T.dsp_efficiency(allocs)
+            emit(f"ablation/{model}/{obj}", us, f"eff={effs[obj]:.4f}")
+        print(f"{model:9s} {effs['paper']:7.3f} {effs['exact']:7.3f} "
+              f"{effs['optimal']:8.3f}")
+
+
+def run_stage_balance(emit):
+    """Uniform vs Algorithm-1 stage boundaries for heterogeneous archs —
+    the TPU port of the paper's 'flexible allocation beats constrained'."""
+    print("\n== Pipeline stage balance (TPU mesh 16x16, train_4k) ==")
+    print(f"{'arch':22s} {'S':>2s} {'T':>2s} {'mb':>3s} "
+          f"{'util(alloc)':>11s} {'util(uniform)':>13s} {'bubble':>7s}")
+    for arch in ARCHS:
+        cfg = ARCHS[arch]
+        layers = lm_layer_workloads(cfg, seq_len=4096, batch=256,
+                                    mode="train")
+        t0 = time.time()
+        plan = plan_pipeline(layers, model_axis=16, data_axis=16,
+                             global_batch=256, seq_len=4096, train=True,
+                             d_model=cfg.d_model, allow_infeasible=True)
+        us = (time.time() - t0) * 1e6
+        # uniform boundaries at the same (S, T, mb):
+        flops = [l.macs * 6.0 for l in layers]
+        S = plan.n_stages
+        n = len(flops)
+        uni = [round(i * n / S) for i in range(S + 1)]
+        uni_max = max(sum(flops[uni[i]:uni[i + 1]]) for i in range(S))
+        _, opt_max = _partition_min_max(flops, S)
+        util_uni = plan.utilization * (opt_max / uni_max)
+        fits = plan.mem_per_chip <= 16e9
+        print(f"{arch:22s} {plan.n_stages:2d} {plan.tensor_parallel:2d} "
+              f"{plan.microbatches:3d} {plan.utilization:11.3f} "
+              f"{util_uni:13.3f} {plan.bubble_fraction:7.3f}"
+              f"{'' if fits else '  [exceeds HBM: needs pjit/FSDP path]'}")
+        emit(f"stage_balance/{arch}", us,
+             f"S={plan.n_stages}|T={plan.tensor_parallel}"
+             f"|util={plan.utilization:.3f}|uniform={util_uni:.3f}")

@@ -1,0 +1,49 @@
+"""Kernel microbenches: correctness-at-size plus CPU wall time of the
+reference paths (the Pallas kernels themselves target TPU; interpret mode
+is correctness-only, so wall time here tracks the jnp oracle)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(f, *args, n=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def run(emit):
+    from repro.kernels.conv2d_int8 import ref as cref
+    from repro.kernels.flash_attention import ref as aref
+    from repro.kernels.rglru_scan import ref as sref
+
+    print("\n== Kernel oracle microbenches (CPU) ==")
+    key = jax.random.PRNGKey(0)
+
+    x = jax.random.randint(key, (1, 56, 56, 64), -128, 127, jnp.int8)
+    w = jax.random.randint(key, (3, 3, 64, 128), -30, 30, jnp.int8)
+    shift = jnp.full((128,), 7, jnp.int32)
+    f = jax.jit(lambda a, b, s: cref.conv2d_int8_ref(a, b, s))
+    us = _time(f, x, w, shift)
+    emit("kernels/conv2d_int8_ref_56x56x64x128", us, "int8_conv")
+    print(f"conv2d_int8 ref 56x56x64->128: {us:.0f} us")
+
+    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    f = jax.jit(lambda q: aref.attention_ref(q, q, q))
+    us = _time(f, q)
+    emit("kernels/flash_attention_ref_1k_8h", us, "causal")
+    print(f"attention ref 1k x 8h x 64: {us:.0f} us")
+
+    a = jax.random.uniform(key, (4, 2048, 256), jnp.float32, 0.9, 0.999)
+    b = jax.random.normal(key, (4, 2048, 256), jnp.float32)
+    f = jax.jit(lambda a, b: sref.linear_scan_ref(a, b))
+    us = _time(f, a, b)
+    emit("kernels/linear_scan_ref_4x2048x256", us, "rglru")
+    print(f"linear scan ref 4x2048x256: {us:.0f} us")

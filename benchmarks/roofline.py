@@ -1,0 +1,180 @@
+"""Roofline extraction for every (arch x shape x mesh) cell.
+
+Sources: the dry-run artifacts (experiments/dryrun/*.json) provide the
+compile proof, per-device memory, and the collective-op inventory; XLA's
+cost analysis counts while-loop (scan) bodies ONCE, so the three roofline
+terms are derived from the workload model (repro.core.workload — the same
+numbers Algorithm 1 allocates against, validated against the HLO counts at
+segment granularity) plus a transparent collective model of the sharding
+strategy (Megatron-style TP all-reduces, ZeRO grad reduction, FSDP
+all-gathers, pod-level hierarchical reduction).
+
+Hardware (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+from repro.configs import ARCHS
+from repro.core.workload import lm_layer_workloads, total_params
+from repro.launch.shapes import SHAPES, cell_is_runnable
+
+PEAK = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float
+    hlo_flops_raw: float | None
+    mem_per_dev: float | None
+    coll_inventory: dict | None
+    status: str = "ok"
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        # no-overlap baseline: terms serialize
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achieved fraction of the compute roofline at the modeled step
+        time (= MFU when compute-dominated)."""
+        return self.t_compute / max(self.step_time, 1e-30)
+
+
+def analyze_cell(arch: str, shape: str, mesh: str,
+                 dryrun_dir: str = "experiments/dryrun",
+                 overlap: bool = False) -> Cell | None:
+    cfg = ARCHS[arch]
+    case = SHAPES[shape]
+    ok, _ = cell_is_runnable(cfg, shape)
+    if not ok:
+        return None
+    chips = 512 if mesh == "multipod" else 256
+    n_pod = 2 if mesh == "multipod" else 1
+    data_ax, model_ax = 16 * n_pod, 16
+
+    mode = case.mode
+    layers = lm_layer_workloads(cfg, seq_len=case.seq_len,
+                                batch=case.global_batch, mode=mode)
+    train = mode == "train"
+    flops = 2.0 * sum(l.macs for l in layers) * (3.0 if train else 1.0)
+    pbytes = sum(l.weight_bytes for l in layers)
+    tokens = case.global_batch * (1 if mode == "decode" else case.seq_len)
+    d = cfg.d_model
+
+    # ---- memory term (per-chip bytes / HBM bw)
+    if train:
+        # params: fwd read + bwd read + optimizer read/write (bf16 + moments)
+        param_io = 4.0 * pbytes / chips
+        # activations: each layer writes+reads its output fwd, grad bwd,
+        # plus ~1 recompute read under remat
+        act_io = tokens * d * 2 * len(layers) * 5.0 / chips
+    elif mode == "prefill":
+        param_io = pbytes / chips
+        act_io = tokens * d * 2 * len(layers) * 2.0 / chips
+    else:  # decode: weights re-read per token + KV cache read
+        param_io = pbytes / chips
+        kv = _cache_bytes(cfg, case)
+        act_io = kv / chips
+    t_memory = (param_io + act_io) / HBM_BW
+
+    # ---- compute term
+    t_compute = flops / (chips * PEAK)
+
+    # ---- collective term (per-chip bytes / ICI bw)
+    act_bytes_shard = tokens * d * 2 / data_ax / n_pod
+    n_layers = cfg.n_layers + (cfg.n_enc_layers or 0)
+    coll = 0.0
+    ar = lambda size, n: 2.0 * size * (n - 1) / n     # ring all-reduce
+    if train:
+        coll += n_layers * 2 * (2 if train else 1) * ar(act_bytes_shard,
+                                                        model_ax)
+        fsdp = total_params(layers) * 2 > 16e9 * 2
+        if fsdp:
+            coll += 3.0 * pbytes / model_ax / data_ax * (data_ax - 1) \
+                / data_ax * 2  # per-layer param all-gathers fwd+bwd
+        # gradient reduce-scatter + all-gather over data (ZeRO-1)
+        coll += ar(pbytes / model_ax, data_ax)
+        if n_pod > 1:  # hierarchical cross-pod all-reduce
+            coll += ar(pbytes / (model_ax * 16), n_pod)
+    else:
+        coll += n_layers * 2 * ar(act_bytes_shard, model_ax)
+    t_collective = coll / ICI_BW
+
+    # ---- attach dry-run artifacts
+    tag = f"{arch}_{shape}_{mesh}_pjit.json"
+    path = os.path.join(dryrun_dir, tag)
+    hlo_flops = mem = inv = None
+    status = "no-dryrun"
+    if os.path.exists(path):
+        with open(path) as f:
+            dr = json.load(f)
+        status = dr.get("status", "?")
+        hlo_flops = (dr.get("cost") or {}).get("flops")
+        mem_d = dr.get("memory") or {}
+        mem = (mem_d.get("argument_size_in_bytes", 0)
+               + mem_d.get("temp_size_in_bytes", 0))
+        inv = (dr.get("collectives") or {}).get("count_per_kind")
+    return Cell(arch, shape, mesh, chips, t_compute, t_memory, t_collective,
+                flops, hlo_flops, mem, inv, status)
+
+
+def _cache_bytes(cfg, case) -> float:
+    B, S = case.global_batch, case.seq_len
+    if cfg.attn_impl == "mla":
+        per_tok = cfg.kv_lora_rank + cfg.rope_head_dim
+    else:
+        per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+    n_full = sum(1 for k in cfg.layer_kinds()
+                 if k in ("attn", "moe", "mla", "mla_moe"))
+    n_win = sum(1 for k in cfg.layer_kinds() if k == "attn_local")
+    eff_S = S
+    return (n_full * B * eff_S * per_tok * 2
+            + n_win * B * min(cfg.window or S, S) * 2
+            * 2 * cfg.n_kv_heads * cfg.head_dim)
+
+
+def run(emit, mesh: str = "pod"):
+    print(f"\n== Roofline ({mesh}: {512 if mesh=='multipod' else 256} chips,"
+          " v5e constants) ==")
+    print(f"{'arch':22s}{'shape':13s}{'comp(ms)':>9s}{'mem(ms)':>9s}"
+          f"{'coll(ms)':>9s}{'dom':>6s}{'frac':>6s}{'MF/HLO':>7s}"
+          f"{'mem/dev(GB)':>12s}")
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = analyze_cell(arch, shape, mesh)
+            if c is None:
+                continue
+            cells.append(c)
+            ratio = (c.model_flops / (c.hlo_flops_raw * c.chips)
+                     if c.hlo_flops_raw else float("nan"))
+            memgb = (c.mem_per_dev or 0) / 1e9
+            print(f"{c.arch:22s}{c.shape:13s}{c.t_compute*1e3:9.2f}"
+                  f"{c.t_memory*1e3:9.2f}{c.t_collective*1e3:9.2f}"
+                  f"{c.dominant[:5]:>6s}{c.roofline_fraction:6.2f}"
+                  f"{ratio:7.1f}{memgb:12.2f}")
+            emit(f"roofline/{mesh}/{arch}/{shape}", 0.0,
+                 f"dom={c.dominant}|frac={c.roofline_fraction:.3f}"
+                 f"|comp_ms={c.t_compute*1e3:.2f}")
+    return cells

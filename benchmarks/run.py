@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  table1    : paper Table I (4 CNNs on ZC706-class budget) + baselines
+  ablation  : allocator objectives (paper greedy / exact / waterfill)
+  stage     : pipeline stage balance on the TPU mesh (flexibility claim)
+  roofline  : three-term roofline per (arch x shape x mesh) cell
+  kernels   : Pallas kernel microbenches (interpret-mode correctness +
+              wall time of the jnp oracle path on CPU)
+
+Prints ``name,us_per_call,derived`` CSV lines (one per measurement) plus
+human-readable tables.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+_CSV: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    _CSV.append(line)
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else "all"
+
+    if only in ("all", "table1"):
+        from benchmarks import table1
+        table1.run(emit)
+    if only in ("all", "ablation"):
+        from benchmarks import ablation
+        ablation.run_objectives(emit)
+        ablation.run_stage_balance(emit)
+    if only in ("all", "roofline"):
+        from benchmarks import roofline
+        roofline.run(emit, "pod")
+        roofline.run(emit, "multipod")
+    if only in ("all", "kernels"):
+        from benchmarks import kernel_bench
+        kernel_bench.run(emit)
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for line in _CSV:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

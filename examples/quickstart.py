@@ -1,0 +1,43 @@
+"""Quickstart: the paper's resource-allocation framework in 30 lines.
+
+Runs Algorithm 1 + Algorithm 2 for VGG16 on a ZC706-class budget, prints
+the per-layer allocation and the resulting throughput (paper Table I), then
+plans the same technique for a TPU pod running qwen2-72b.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.configs import ARCHS
+from repro.core import throughput as T
+from repro.core.allocator import allocate_buffers, allocate_compute, \
+    plan_pipeline
+from repro.core.workload import lm_layer_workloads, vgg16
+
+# --- FPGA mode: the faithful reproduction -----------------------------------
+model = vgg16()
+layers = model.layer_workloads(weight_bits=16)
+allocs = allocate_compute(layers, theta_total=900)
+allocate_buffers(allocs, bram_total=545, bandwidth_bytes=4.2e9,
+                 freq_hz=200e6)
+
+print(f"== {model.name} on 900 DSPs @ 200 MHz ==")
+print(f"{'layer':10s} {'theta':>6s} {'C_p':>4s} {'M_p':>4s} {'K':>3s}")
+for a in allocs:
+    if a.layer.macs:
+        print(f"{a.layer.name:10s} {a.theta:6d} {a.Cp:4d} {a.Mp:4d} {a.K:3d}")
+print(f"DSPs used      : {T.dsps_used(allocs)}")
+print(f"DSP efficiency : {T.dsp_efficiency(allocs):.3f}")
+print(f"Throughput     : {T.pipeline_fps(allocs, freq_hz=200e6):.1f} fps "
+      f"({T.gops(allocs, freq_hz=200e6):.0f} GOPS)")
+
+# --- Mesh mode: the same objective on a TPU pod ------------------------------
+cfg = ARCHS["qwen2-72b"]
+lm = lm_layer_workloads(cfg, seq_len=4096, batch=256, mode="train")
+plan = plan_pipeline(lm, model_axis=16, data_axis=16, global_batch=256,
+                     seq_len=4096, train=True, d_model=cfg.d_model)
+print(f"\n== {cfg.name} on a 16x16 v5e pod (train, 4k seq) ==")
+print(f"stages x tensor  : {plan.n_stages} x {plan.tensor_parallel}")
+print(f"microbatches (K) : {plan.microbatches}")
+print(f"layers per stage : {plan.layers_per_stage}")
+print(f"bubble fraction  : {plan.bubble_fraction:.3f}")
+print(f"predicted util   : {plan.utilization:.3f}")

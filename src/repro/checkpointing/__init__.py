@@ -1,0 +1,4 @@
+from repro.checkpointing.checkpoint import (latest_step, restore, save,
+                                            restore_resharded)
+
+__all__ = ["save", "restore", "latest_step", "restore_resharded"]

@@ -1,0 +1,70 @@
+"""Channel-wise fixed-point quantization (paper Section 3.3, Fig. 3(c)).
+
+The paper computes int8/int16 MACs into 32-bit partial sums; different
+channels may use different fixed-point formats (power-of-2 scales = "shift
+bits"), aligned by left-shifters before accumulation, then right-shifted and
+truncated when writing output activations. We reproduce exactly that
+arithmetic so the Pallas conv kernel and the pure-jnp oracle agree bit-for-bit
+with the hardware-style pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def po2_scale(x: jnp.ndarray, axis, bits: int = 8) -> jnp.ndarray:
+    """Per-channel power-of-2 exponent e such that x / 2^e fits int<bits>.
+
+    Returns integer exponents (can be negative). Reduction over all axes
+    except `axis`.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    amax = jnp.max(jnp.abs(x), axis=red, keepdims=False)
+    amax = jnp.maximum(amax, 1e-12)
+    # smallest e with amax / 2^e <= qmax
+    e = jnp.ceil(jnp.log2(amax / qmax)).astype(jnp.int32)
+    return e
+
+
+def quantize_po2(x: jnp.ndarray, axis: int, bits: int = 8):
+    """-> (q int8/int16, e int32 per-channel): x ~= q * 2^e."""
+    e = po2_scale(x, axis, bits)
+    shape = [1] * x.ndim
+    shape[axis % x.ndim] = -1
+    scale = jnp.exp2(-e.astype(jnp.float32)).reshape(shape)
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x * scale), -qmax - 1, qmax)
+    dt = jnp.int8 if bits <= 8 else jnp.int16
+    return q.astype(dt), e
+
+
+def dequantize_po2(q: jnp.ndarray, e: jnp.ndarray, axis: int) -> jnp.ndarray:
+    shape = [1] * q.ndim
+    shape[axis % q.ndim] = -1
+    return q.astype(jnp.float32) * jnp.exp2(e.astype(jnp.float32)).reshape(shape)
+
+
+def align_partial_sums(psum: jnp.ndarray, e_in: jnp.ndarray,
+                       e_common: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Left-shift partial sums of per-channel formats onto a common scale
+    (the adder-tree alignment in Fig. 3(c)). int32 in, int32 out."""
+    shape = [1] * psum.ndim
+    shape[axis % psum.ndim] = -1
+    sh = (e_in - e_common).reshape(shape)
+    return jnp.left_shift(psum, jnp.maximum(sh, 0)) >> jnp.maximum(-sh, 0)
+
+
+def requantize_output(acc32: jnp.ndarray, e_acc: jnp.ndarray | int,
+                      e_out: jnp.ndarray | int, bits: int = 8) -> jnp.ndarray:
+    """Right-shift + truncate 32-bit accumulators to the output activation
+    format (paper: "partial sums should be right shifted and truncated")."""
+    shift = jnp.asarray(e_out - e_acc, jnp.int32)
+    y = jnp.where(shift >= 0,
+                  jnp.right_shift(acc32, jnp.maximum(shift, 0)),
+                  jnp.left_shift(acc32, jnp.maximum(-shift, 0)))
+    qmax = 2 ** (bits - 1) - 1
+    dt = jnp.int8 if bits <= 8 else jnp.int16
+    return jnp.clip(y, -qmax - 1, qmax).astype(dt)

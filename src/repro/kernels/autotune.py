@@ -1,0 +1,101 @@
+"""Static block-size autotuner for the Pallas kernels.
+
+On real TPUs you would time candidates; on this CPU container we rank them
+structurally — exactly the §Perf methodology (napkin math over the memory
+hierarchy), encoded:
+
+  * hard constraints: the working set of one grid step must fit VMEM
+    (~16 MB/core, we budget half for double buffering), tiles must be
+    MXU/VPU aligned (lane dim % 128, sublane % 8 / % 32 for int8);
+  * rank: maximize MXU occupancy (tile dims vs 128x128 systolic array),
+    then minimize HBM traffic = sum over grid of block bytes fetched
+    (weight-stationarity falls out of this term: revisiting the same w
+    block across the n-grid is free under Pallas's revolving buffers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+VMEM_BYTES = 16 * 2 ** 20
+VMEM_BUDGET = VMEM_BYTES // 2          # double buffering headroom
+MXU = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmCandidate:
+    bn: int
+    bm: int
+    bk: int
+    vmem_bytes: int
+    hbm_bytes: float      # total traffic for the whole GEMM
+    mxu_occupancy: float  # fraction of the 128x128 array covered
+
+
+def gemm_candidates(N: int, K: int, M: int, *, in_bytes: int = 1,
+                    acc_bytes: int = 4,
+                    tiles=(128, 256, 512)) -> list[GemmCandidate]:
+    out = []
+    for bn in tiles:
+        for bm in tiles:
+            for bk in tiles:
+                vmem = (bn * bk + bk * bm) * in_bytes + bn * bm * acc_bytes
+                if vmem > VMEM_BUDGET:
+                    continue
+                gn = math.ceil(N / bn)
+                gm = math.ceil(M / bm)
+                gk = math.ceil(K / bk)
+                # x block fetched once per (n, k) [revisited across m],
+                # w block once per (m, k) [revisited across n under the
+                # sequential k-inner grid], out written once per (n, m).
+                hbm = (gn * gk * bn * bk * in_bytes * gm ** 0
+                       + gm * gk * bk * bm * in_bytes
+                       + gn * gm * bn * bm)
+                occ = min(1.0, bn / MXU) * min(1.0, bm / MXU) \
+                    * min(1.0, bk / MXU)
+                out.append(GemmCandidate(bn, bm, bk, vmem, hbm, occ))
+    return out
+
+
+def pick_gemm_blocks(N: int, K: int, M: int, **kw) -> GemmCandidate:
+    """Best candidate: max MXU occupancy, then min HBM traffic, then min
+    VMEM (leave room for the pipeline)."""
+    cands = gemm_candidates(N, K, M, **kw)
+    if not cands:
+        raise ValueError("no feasible block config fits VMEM")
+    return min(cands, key=lambda c: (-c.mxu_occupancy, c.hbm_bytes,
+                                     c.vmem_bytes))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCandidate:
+    bq: int
+    bkv: int
+    vmem_bytes: int
+    hbm_bytes: float
+
+
+def pick_attention_blocks(S: int, d: int, *, dtype_bytes: int = 2,
+                          tiles=(128, 256, 512)) -> AttnCandidate:
+    """Flash-attention q/kv tile sizes: fit q-tile + kv-tile + fp32
+    scratch in VMEM; minimize KV re-reads (k/v fetched S/bq times)."""
+    best = None
+    for bq in tiles:
+        for bkv in tiles:
+            if bq > S or bkv > S:
+                continue
+            vmem = (bq * d + 2 * bkv * d) * dtype_bytes \
+                + bq * (d + 2) * 4 + bq * bkv * 4
+            if vmem > VMEM_BUDGET:
+                continue
+            hbm = (S * d                       # q once
+                   + 2 * S * d * math.ceil(S / bq)   # k/v per q tile
+                   + S * d) * dtype_bytes
+            c = AttnCandidate(bq, bkv, vmem, hbm)
+            if best is None or (c.hbm_bytes, c.vmem_bytes) < (
+                    best.hbm_bytes, best.vmem_bytes):
+                best = c
+    if best is None:
+        raise ValueError("no feasible attention tiling fits VMEM")
+    return best

@@ -1,0 +1,30 @@
+"""Jitted wrappers: conv2d as im2col + the int8 GEMM Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d_int8.kernel import gemm_int8
+
+
+@partial(jax.jit, static_argnames=("stride", "interpret", "emit_int32"))
+def conv2d_int8(x: jnp.ndarray, w: jnp.ndarray, shift: jnp.ndarray,
+                stride: int = 1, interpret: bool = False,
+                emit_int32: bool = False) -> jnp.ndarray:
+    """x [B,H,W,C] int8, w [R,S,C,M] int8, shift [M] -> int8 [B,H',W',M].
+
+    im2col (the line-buffer address generator) runs in XLA; the MAC array +
+    requantize pipeline is the Pallas kernel.
+    """
+    R, S, C, M = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32), (R, S), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.int8)
+    B, Ho, Wo, K = patches.shape
+    wt = jnp.transpose(w, (2, 0, 1, 3)).reshape(R * S * C, M)
+    out = gemm_int8(patches.reshape(-1, K), wt, shift, interpret=interpret,
+                    emit_int32=emit_int32)
+    return out.reshape(B, Ho, Wo, M)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the int8 conv/GEMM engine (paper Fig. 3).
+
+The hardware pipeline: int8 activations x int8 weights -> int32 partial
+sums -> per-output-channel right-shift + truncate to int8. The conv is
+expressed as an implicit GEMM over im2col patches (the activation line
+buffer's address generation), which is exactly what the Pallas kernel
+computes in MXU tiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_int8_ref(x: jnp.ndarray, w: jnp.ndarray,
+                  shift: jnp.ndarray) -> jnp.ndarray:
+    """x [N, K] int8, w [K, M] int8, shift [M] int32 (right-shift bits).
+    Returns int8 [N, M]: clip((x @ w) >> shift)."""
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    y = jnp.right_shift(acc, shift[None, :].astype(jnp.int32))
+    return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
+def conv2d_int8_ref(x: jnp.ndarray, w: jnp.ndarray, shift: jnp.ndarray,
+                    stride: int = 1) -> jnp.ndarray:
+    """x [B,H,W,C] int8, w [R,S,C,M] int8 (SAME padding), shift [M].
+    Returns int8 [B,H',W',M]."""
+    R, S, C, M = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32), (R, S), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.int8)
+    B, Ho, Wo, K = patches.shape
+    # conv_general_dilated_patches emits features as [C, R, S] blocks.
+    wt = jnp.transpose(w, (2, 0, 1, 3)).reshape(R * S * C, M)
+    out = gemm_int8_ref(patches.reshape(-1, K), wt, shift)
+    return out.reshape(B, Ho, Wo, M)

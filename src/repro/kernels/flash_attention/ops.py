@@ -1,0 +1,16 @@
+"""Jitted wrapper for blockwise attention."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              interpret: bool = False):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)

@@ -1,0 +1,27 @@
+"""Oracle: plain causal softmax attention (fp32 softmax)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int = 0) -> jnp.ndarray:
+    """q [B,Sq,H,d], k/v [B,Skv,H,d] -> [B,Sq,H,d]."""
+    B, Sq, H, d = q.shape
+    Skv = k.shape[1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(d)
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)

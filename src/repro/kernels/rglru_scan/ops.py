@@ -1,0 +1,14 @@
+"""Jitted wrapper for the chunked linear recurrence."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import linear_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan(a, b, chunk: int = 256, interpret: bool = False):
+    return linear_scan(a, b, chunk=chunk, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Oracle for the chunked diagonal linear recurrence h_t = a_t*h_{t-1}+b_t
+(RG-LRU core; RWKV6's per-channel decay uses the same primitive on its
+diagonal part)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                    h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """a, b [B,S,D] float32 -> h [B,S,D]; h_{-1} = h0 or 0."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    h_init = h0 if h0 is not None else jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, h_init,
+                         (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

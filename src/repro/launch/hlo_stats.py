@@ -1,0 +1,52 @@
+"""HLO text statistics: per-collective operand byte accounting.
+
+Separate from dryrun.py so tests and benchmarks can import it without
+triggering dryrun's 512-device XLA_FLAGS (which must be set before any
+jax import and therefore lives on dryrun's first lines).
+"""
+
+from __future__ import annotations
+
+import re
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_DEF_RE = re.compile(r"%([\w.\-]+) = ([a-z]+[0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (SPMD-partitioned)
+    HLO. Sizes are per-device; multiply by device count for fabric-total."""
+    sizes: dict[str, int] = {}
+    per_kind: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            name, dt, dims = m.groups()
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            sizes[name] = n * _DTYPE_BYTES.get(dt, 4)
+        cm = _COLL_RE.search(line)
+        if cm and "=" in line and not line.strip().startswith("//"):
+            kind = cm.group(1)
+            if f" {kind}(" not in line and f"{kind}-start(" not in line:
+                continue
+            ops = re.findall(r"\(([^)]*)\)", line)
+            total = 0
+            if ops:
+                for ref in re.findall(r"%([\w.\-]+)", ops[0]):
+                    total += sizes.get(ref, 0)
+            if total == 0 and m:
+                total = sizes.get(m.group(1), 0)
+            per_kind[kind] = per_kind.get(kind, 0) + total
+            count[kind] = count.get(kind, 0) + 1
+    return {"bytes_per_kind": per_kind, "count_per_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+

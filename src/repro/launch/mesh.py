@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; all meshes are built
+inside functions (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production mesh: one pod = (16, 16) chips over
+    (data, model); two pods = (2, 16, 16) over (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, n_pod: int = 1):
+    """Small host-device mesh for tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=n_data*n_model*n_pod)."""
+    if n_pod > 1:
+        return jax.make_mesh((n_pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,81 @@
+"""Serving launcher: batched prefill + decode with the KV/state cache.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get as get_arch
+from repro.configs.base import reduced as reduce_cfg
+from repro.launch import steps as STEPS
+from repro.models import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.gen
+    cache = T.init_cache(cfg, args.batch, max_len)
+
+    prefill = jax.jit(STEPS.make_prefill_step(cfg))
+    decode = jax.jit(STEPS.make_serve_step(cfg))
+
+    key = jax.random.PRNGKey(1)
+    if cfg.frontend_stub and cfg.family != "enc_dec":
+        batch = {"embeds": jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16),
+            "positions": jnp.broadcast_to(
+                jnp.arange(args.prompt_len)[None, :, None],
+                (args.batch, args.prompt_len, 3)).astype(jnp.int32)}
+    else:
+        batch = {"tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab)}
+        if cfg.family == "enc_dec":
+            batch["enc_embeds"] = jax.random.normal(
+                key, (args.batch, args.prompt_len, cfg.d_model),
+                jnp.bfloat16)
+
+    t0 = time.time()
+    logits_last, cache = prefill(params, cache, batch)
+    tok = jnp.argmax(logits_last.astype(jnp.float32), -1)[:, None]
+    t1 = time.time()
+    outs = [tok]
+    for _ in range(args.gen - 1):
+        if cfg.frontend_stub and cfg.family != "enc_dec":
+            step_in = {"embeds": jnp.take(params["embed"], tok, axis=0
+                                          ).astype(jnp.bfloat16),
+                       "positions": jnp.zeros((args.batch, 1, 3), jnp.int32)}
+        else:
+            step_in = {"tokens": tok}
+        nxt, cache = decode(params, cache, step_in)
+        tok = nxt[:, None]
+        outs.append(tok)
+    toks = jnp.concatenate(outs, 1)
+    dt = time.time() - t1
+    print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok in "
+          f"{t1-t0:.2f}s; decoded {args.gen} x {args.batch} seqs in "
+          f"{dt:.2f}s ({args.gen*args.batch/max(dt,1e-9):.1f} tok/s)")
+    print("[serve] sample token ids:", toks[0, :8].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,88 @@
+"""The assigned input-shape set and ShapeDtypeStruct stand-ins.
+
+Four shapes per LM architecture (40 cells):
+  train_4k     seq 4096  x global_batch 256   (training, train_step)
+  prefill_32k  seq 32768 x global_batch 32    (inference prefill)
+  decode_32k   one token against a 32768 KV cache, global_batch 128
+  long_500k    one token against a 524288-token context, global_batch 1
+               (sub-quadratic archs only: recurrentgemma-2b, rwkv6-7b)
+
+``input_specs`` returns ShapeDtypeStructs only — weak-type-correct,
+shardable, no allocation — which is what dryrun.py lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                    # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """long_500k runs only for sub-quadratic archs (see DESIGN.md)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 524288-ctx decode skipped"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """Model inputs for the given shape case, as ShapeDtypeStructs."""
+    B, S = case.global_batch, case.seq_len
+    bf16, i32 = jnp.bfloat16, jnp.int32
+    if case.mode == "train":
+        if cfg.family == "enc_dec":
+            return {"enc_embeds": _sds((B, S, cfg.d_model), bf16),
+                    "tokens": _sds((B, S), i32),
+                    "labels": _sds((B, S), i32)}
+        if cfg.frontend_stub:  # vlm: precomputed patch embeddings + M-RoPE
+            return {"embeds": _sds((B, S, cfg.d_model), bf16),
+                    "positions": _sds((B, S, 3), i32),
+                    "labels": _sds((B, S), i32)}
+        return {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+    if case.mode == "prefill":
+        if cfg.family == "enc_dec":
+            return {"enc_embeds": _sds((B, S, cfg.d_model), bf16),
+                    "tokens": _sds((B, S), i32)}
+        if cfg.frontend_stub:
+            return {"embeds": _sds((B, S, cfg.d_model), bf16),
+                    "positions": _sds((B, S, 3), i32)}
+        return {"tokens": _sds((B, S), i32)}
+    # decode: one new token against a cache of case.seq_len
+    if cfg.frontend_stub and cfg.family != "enc_dec":
+        return {"embeds": _sds((B, 1, cfg.d_model), bf16),
+                "positions": _sds((B, 1, 3), i32)}
+    return {"tokens": _sds((B, 1), i32)}
+
+
+def cache_specs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """Abstract KV/state cache for decode shapes."""
+    from repro.models import transformer as T
+    B = case.global_batch
+
+    def make():
+        return T.init_cache(cfg, B, case.seq_len)
+
+    return jax.eval_shape(make)

@@ -1,0 +1,59 @@
+"""Jittable step functions: train_step (grad + clip + AdamW), prefill_step
+and serve_step (decode with cache). Shared by train.py, serve.py and
+dryrun.py."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro import optim
+
+
+def make_train_step(cfg: ModelConfig, *, lr=3e-4, remat: bool = True,
+                    clip_norm: float = 1.0):
+    moment_dtype = cfg.opt_moment_dtype
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch, remat=remat), has_aux=True
+        )(params)
+        grads, gn = optim.clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optim.adamw_update(
+            params, grads, opt_state, lr=lr, moment_dtype=moment_dtype)
+        metrics = dict(metrics, grad_norm=gn)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, cache, batch):
+        logits, cache, _ = T.forward(params, cfg, batch, cache=cache)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: new token against the running cache (greedy)."""
+    def serve_step(params, cache, batch):
+        logits, cache, _ = T.forward(params, cfg, batch, cache=cache)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok, cache
+
+    return serve_step
+
+
+def abstract_state(cfg: ModelConfig):
+    """(params, opt_state) as ShapeDtypeStructs — no allocation."""
+    def make():
+        p = T.init_params(cfg, jax.random.PRNGKey(0))
+        o = optim.adamw_init(p, cfg.opt_moment_dtype)
+        return p, o
+    return jax.eval_shape(make)

@@ -1,0 +1,255 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and RWKV6 (Finch).
+
+Both expose a sequence path (training / prefill; parallel where the math
+permits — RG-LRU's diagonal recurrence uses an associative scan, RWKV6's
+rank-1 state update uses a time scan whose chunked Pallas form lives in
+``repro.kernels.rglru_scan``) and a single-step path for decode. Decode
+state is O(1) in sequence length — these are the two assigned architectures
+that run the `long_500k` shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (Params, apply_dense, dense, rms_norm,
+                                 rms_norm_init)
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin, arXiv:2402.19427, Section 2.4)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_block_init(key, cfg, dtype) -> Params:
+    d, dr = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 8)
+    # Lambda init so that a = sigmoid(lam)^c spreads over (0.9, 0.999).
+    u = jax.random.uniform(ks[6], (dr,), jnp.float32,
+                           0.9 ** (1 / _RGLRU_C), 0.999 ** (1 / _RGLRU_C))
+    lam = jnp.log(u / (1 - u))
+    return {
+        "wx": dense(ks[0], d, dr, dtype),          # rnn branch in
+        "wy": dense(ks[1], d, dr, dtype),          # gate branch in
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, dr),
+                                     jnp.float32) / math.sqrt(
+                                         cfg.conv1d_width)).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_input_gate": dense(ks[3], dr, dr, dtype),
+        "w_rec_gate": dense(ks[4], dr, dr, dtype),
+        "lam": lam.astype(jnp.float32),
+        "wo": dense(ks[5], dr, d, dtype),
+    }
+
+
+def _rglru_coeffs(p: Params, xr: jnp.ndarray):
+    """Gate computations shared by scan and step paths. xr [.., dr]."""
+    i_gate = jax.nn.sigmoid(apply_dense(p["w_input_gate"], xr)
+                            .astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(apply_dense(p["w_rec_gate"], xr)
+                            .astype(jnp.float32))
+    log_a = -_RGLRU_C * r_gate * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i_gate * xr.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(p: Params, xr: jnp.ndarray, h0: jnp.ndarray | None = None):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t via associative
+    scan over time. xr [B,S,dr] (post-conv). Returns (y [B,S,dr], h_last)."""
+    a, b = _rglru_coeffs(p, xr)
+
+    if h0 is not None:
+        # Fold the carry state in as a virtual step 0.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None, :], b], axis=1)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(xr.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(p: Params, xr: jnp.ndarray, h: jnp.ndarray):
+    """One decode step. xr [B,dr], h [B,dr] fp32."""
+    a, b = _rglru_coeffs(p, xr)
+    h_new = a * h + b
+    return h_new.astype(xr.dtype), h_new
+
+
+def _causal_conv1d(w, b, x, state=None):
+    """Short causal conv (Griffin's width-4 temporal conv). x [B,S,dr];
+    state [B,W-1,dr] carries the tail for decode."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):] if W > 1 else pad[:, :0]
+    return out, new_state
+
+
+def rglru_block_apply(p: Params, cfg, x, *, state: Params | None = None):
+    """Full Griffin recurrent block: (gate branch GeLU) * (conv1d -> RG-LRU),
+    then output projection. state = {"h": [B,dr], "conv": [B,W-1,dr]}.
+    Returns (y [B,S,D], new_state)."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(apply_dense(p["wy"], x))
+    xr = apply_dense(p["wx"], x)
+    conv_state = state["conv"] if state is not None else None
+    xr, conv_state = _causal_conv1d(p["conv_w"], p["conv_b"], xr, conv_state)
+    if state is not None and S == 1:
+        y, h = rglru_step(p, xr[:, 0], state["h"])
+        y = y[:, None, :]
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h = rglru_scan(p, xr, h0)
+    new_state = {"h": h, "conv": conv_state.astype(x.dtype)}
+    return apply_dense(p["wo"], y * gate), new_state
+
+
+def rglru_state_init(cfg, batch: int, dtype=jnp.float32) -> Params:
+    dr = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, dr), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 "Finch" time-mix + channel-mix (arXiv:2404.05892)
+# ---------------------------------------------------------------------------
+
+_DDLERP_RANK = 32
+_DECAY_RANK = 64
+
+
+def rwkv6_block_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    nh = d // hd
+    ks = jax.random.split(key, 16)
+    mix = lambda k: (jax.random.uniform(k, (d,), jnp.float32)).astype(dtype)
+    p = {
+        # token-shift data-dependent lerp (ddlerp): base mus + low-rank delta
+        "mu_base": jnp.stack([mix(ks[0]) for _ in range(5)]),   # r,k,v,w,g
+        "ddl_w1": (jax.random.normal(ks[1], (d, 5 * _DDLERP_RANK),
+                                     jnp.float32) * 0.01).astype(dtype),
+        "ddl_w2": (jax.random.normal(ks[2], (5, _DDLERP_RANK, d),
+                                     jnp.float32) * 0.01).astype(dtype),
+        "wr": dense(ks[3], d, d, dtype),
+        "wk": dense(ks[4], d, d, dtype),
+        "wv": dense(ks[5], d, d, dtype),
+        "wg": dense(ks[6], d, d, dtype),
+        "wo": dense(ks[7], d, d, dtype),
+        # data-dependent decay lora
+        "w0": (jax.random.uniform(ks[8], (d,), jnp.float32, -8.0, -5.0)),
+        "dec_w1": (jax.random.normal(ks[9], (d, _DECAY_RANK), jnp.float32)
+                   * 0.01).astype(dtype),
+        "dec_w2": (jax.random.normal(ks[10], (_DECAY_RANK, d), jnp.float32)
+                   * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[11], (nh, hd), jnp.float32) * 0.5),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "mu_cm": jnp.stack([mix(ks[12]) for _ in range(2)]),    # r,k
+        "cm_wr": dense(ks[13], d, d, dtype),
+        "cm_wk": dense(ks[14], d, cfg.d_ff, dtype),
+        "cm_wv": dense(ks[15], cfg.d_ff, d, dtype),
+    }
+    return p
+
+
+def _token_shift(x, prev):
+    """x [B,S,D] -> x shifted right by one; prev [B,D] fills slot 0."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    dx = xs - x
+    base = x[:, :, None, :] + dx[:, :, None, :] * p["mu_base"]  # [B,S,5,D]
+    lo = jnp.tanh((x + dx * 0.5) @ p["ddl_w1"])                  # [B,S,5R]
+    lo = lo.reshape(*lo.shape[:-1], 5, _DDLERP_RANK)
+    delta = jnp.einsum("bsfr,frd->bsfd", lo, p["ddl_w2"])
+    return base + delta * dx[:, :, None, :]
+
+
+def rwkv6_wkv_scan(p, r, k, v, w, state0):
+    """The WKV6 recurrence. r,k,v [B,S,nh,hd]; w [B,S,nh,hd] in (0,1).
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  o_t = r_t (S_{t-1} + u k_t^T v_t)
+    state [B,nh,hd,hd] fp32. Sequential lax.scan here; the chunked TPU
+    kernel (repro.kernels.rglru_scan) computes the same in block-parallel
+    form.
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S + p["u"][None, :, :, None] * kv)
+        S_new = w_t[..., None] * S + kv
+        return S_new, o
+
+    rs, ks_, vs, ws = (t.swapaxes(0, 1).astype(jnp.float32)
+                       for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, (rs, ks_, vs, ws))
+    return outs.swapaxes(0, 1), state                       # [B,S,nh,hd]
+
+
+def rwkv6_block_apply(p: Params, cfg, x, *, state: Params | None = None):
+    """Time-mix + channel-mix. state = {"shift_tm","shift_cm" [B,D],
+    "wkv" [B,nh,hd,hd]}. Returns (y, new_state)."""
+    B, S, D = x.shape
+    hd = cfg.head_dim
+    # Head count follows the projection width, which may be tensor-
+    # parallel-sliced (pipeline executor slices wr/wk/wv/wg by heads).
+    d_loc = p["wr"]["w"].shape[-1]
+    nh = d_loc // hd
+    st = state or {
+        "shift_tm": jnp.zeros((B, D), x.dtype),
+        "shift_cm": jnp.zeros((B, D), x.dtype),
+        "wkv": jnp.zeros((B, nh, hd, hd), jnp.float32),
+    }
+    # ---- time mix
+    xs = _token_shift(x, st["shift_tm"])
+    mixed = _ddlerp(p, x, xs)                                # [B,S,5,D]
+    xr, xk, xv, xw, xg = (mixed[:, :, i] for i in range(5))
+    r = apply_dense(p["wr"], xr).reshape(B, S, nh, hd)
+    k = apply_dense(p["wk"], xk).reshape(B, S, nh, hd)
+    v = apply_dense(p["wv"], xv).reshape(B, S, nh, hd)
+    g = apply_dense(p["wg"], xg)
+    dec = p["w0"] + jnp.tanh(xw @ p["dec_w1"]) @ p["dec_w2"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, S, nh, hd)
+    o, wkv = rwkv6_wkv_scan(p, r, k, v, w, st["wkv"])
+    o = o.reshape(B, S, nh * hd)
+    # per-head group norm
+    og = o.reshape(B, S, nh, hd).astype(jnp.float32)
+    og = (og - og.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        og.var(-1, keepdims=True) + 64e-5)
+    o = (og.reshape(B, S, nh * hd) * p["ln_x_scale"]
+         + p["ln_x_bias"]).astype(x.dtype)
+    y_tm = apply_dense(p["wo"], o * jax.nn.silu(g))
+    new_state = {"shift_tm": x[:, -1], "wkv": wkv}
+    return y_tm, new_state
+
+
+def rwkv6_channel_mix(p: Params, x, shift_prev):
+    """RWKV channel-mix (the FFN analogue). Returns (y, new_shift)."""
+    xs = _token_shift(x, shift_prev)
+    xr = x + (xs - x) * p["mu_cm"][0]
+    xk = x + (xs - x) * p["mu_cm"][1]
+    rgate = jax.nn.sigmoid(apply_dense(p["cm_wr"], xr))
+    kk = jnp.square(jax.nn.relu(apply_dense(p["cm_wk"], xk)))
+    return rgate * apply_dense(p["cm_wv"], kk), x[:, -1]

@@ -1,0 +1,345 @@
+"""Model assembly: decoder-only / encoder-decoder transformers over the
+block kinds (attn, attn_local, mla, moe variants, rglru, rwkv).
+
+Layers are grouped into maximal runs of identical kind ("segments"); each
+segment's parameters are stacked on a leading axis and executed with
+``jax.lax.scan`` so that an 88-layer model lowers to one compiled block per
+segment (compile time and HLO size stay bounded for the 512-device
+dry-run). Heterogeneous archs (RecurrentGemma's 2:1 pattern) simply produce
+short segments which are unrolled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+Params = dict[str, Any]
+
+ATTN_KINDS = ("attn", "attn_local", "mla", "moe", "mla_moe")
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    start: int
+    count: int
+
+    @property
+    def scanned(self) -> bool:
+        return self.count >= 3
+
+
+def segments(cfg: ModelConfig) -> list[Segment]:
+    kinds = cfg.layer_kinds()
+    segs: list[Segment] = []
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        segs.append(Segment(kinds[i], i, j - i))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply dispatch
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(kind: str, cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": L.rms_norm_init(d, dtype),
+                 "ln2": L.rms_norm_init(d, dtype)}
+    if kind in ("attn", "attn_local"):
+        p["attn"] = L.gqa_init(ks[0], cfg, dtype)
+    elif kind in ("mla", "mla_moe"):
+        p["attn"] = L.mla_init(ks[0], cfg, dtype)
+    elif kind == "moe":
+        p["attn"] = L.gqa_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = R.rglru_block_init(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = R.rwkv6_block_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind.endswith("moe"):
+        p["mlp"] = L.moe_init(ks[1], cfg, dtype)
+    elif kind != "rwkv":
+        p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def _layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                 dtype) -> Params | None:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind in ("attn", "moe"):
+        return {"k": jnp.zeros((batch, max_len, KV, hd), dtype),
+                "v": jnp.zeros((batch, max_len, KV, hd), dtype),
+                "idx": jnp.zeros((), jnp.int32)}
+    if kind == "attn_local":
+        size = min(cfg.window or max_len, max_len)
+        return {"k": jnp.zeros((batch, size, KV, hd), dtype),
+                "v": jnp.zeros((batch, size, KV, hd), dtype),
+                "slot_pos": jnp.full((size,), -(10 ** 9), jnp.int32),
+                "idx": jnp.zeros((), jnp.int32)}
+    if kind in ("mla", "mla_moe"):
+        return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+                "idx": jnp.zeros((), jnp.int32)}
+    if kind == "rglru":
+        st = R.rglru_state_init(cfg, batch, dtype)
+        return st
+    if kind == "rwkv":
+        nh = cfg.d_model // cfg.head_dim
+        return {"shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+                "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+                "wkv": jnp.zeros((batch, nh, cfg.head_dim, cfg.head_dim),
+                                 jnp.float32)}
+    raise ValueError(kind)
+
+
+def _layer_apply(kind: str, p: Params, cfg: ModelConfig, x, positions,
+                 cache: Params | None):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        h, tm_state = R.rwkv6_block_apply(
+            p["rwkv"], cfg, L.rms_norm(p["ln1"], x),
+            state=None if cache is None else
+            {"shift_tm": cache["shift_tm"], "wkv": cache["wkv"]})
+        x = x + h
+        cm_prev = (cache["shift_cm"] if cache is not None
+                   else jnp.zeros_like(x[:, 0]))
+        h2, cm_new = R.rwkv6_channel_mix(p["rwkv"], L.rms_norm(p["ln2"], x),
+                                         cm_prev)
+        x = x + h2
+        new_cache = None if cache is None else {
+            "shift_tm": tm_state["shift_tm"], "shift_cm": cm_new,
+            "wkv": tm_state["wkv"]}
+        return x, new_cache, aux
+    if kind == "rglru":
+        h, st = R.rglru_block_apply(p["rec"], cfg, L.rms_norm(p["ln1"], x),
+                                    state=cache)
+        x = x + h
+        new_cache = st if cache is not None else None
+    elif kind in ("mla", "mla_moe"):
+        h, new_cache = L.mla_apply(p["attn"], cfg, L.rms_norm(p["ln1"], x),
+                                   positions, cache=cache)
+        x = x + h
+    else:
+        h, new_cache = L.gqa_apply(
+            p["attn"], cfg, L.rms_norm(p["ln1"], x), positions, cache=cache,
+            window=cfg.window if kind == "attn_local" else 0)
+        x = x + h
+    if kind.endswith("moe"):
+        h, aux = L.moe_apply(p["mlp"], cfg, L.rms_norm(p["ln2"], x))
+    else:
+        h = L.mlp_apply(p["mlp"], L.rms_norm(p["ln2"], x), cfg.mlp_kind)
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder layers (Seamless backbone) — bidirectional attn + cross-attn in dec
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer_init(cfg, key, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.rms_norm_init(cfg.d_model, dtype),
+            "ln2": L.rms_norm_init(cfg.d_model, dtype),
+            "attn": L.gqa_init(ks[0], cfg, dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                              dtype)}
+
+
+def _dec_xattn_init(cfg, key, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln3": L.rms_norm_init(cfg.d_model, dtype),
+            "xattn": L.gqa_init(ks[0], cfg, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Model init / cache init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key=None, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": L.rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense(ks[1], cfg.d_model, cfg.vocab, dtype)
+    for si, seg in enumerate(segments(cfg)):
+        keys = jax.random.split(ks[2 + si % 6], seg.count)
+        stacked = [
+            _layer_init(seg.kind, cfg, keys[i], dtype)
+            for i in range(seg.count)]
+        if cfg.n_enc_layers and seg.kind in ATTN_KINDS:
+            for i, lp in enumerate(stacked):
+                lp.update(_dec_xattn_init(
+                    cfg, jax.random.fold_in(keys[i], 7), dtype))
+        p[f"seg{si}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    if cfg.n_enc_layers:
+        ekeys = jax.random.split(ks[7], cfg.n_enc_layers)
+        enc = [_enc_layer_init(cfg, k, dtype) for k in ekeys]
+        p["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        p["enc_norm"] = L.rms_norm_init(cfg.d_model, dtype)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    c: Params = {"_pos": jnp.zeros((), jnp.int32)}
+    for si, seg in enumerate(segments(cfg)):
+        per = [_layer_cache(seg.kind, cfg, batch, max_len, dtype)
+               for _ in range(seg.count)]
+        c[f"seg{si}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return c
+
+
+def _positions(cfg: ModelConfig, B: int, S: int, offset) -> jnp.ndarray:
+    pos = offset + jnp.arange(S)[None, :]
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope:
+        # Text tokens: all three M-RoPE components equal the text position.
+        return jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def encode(params: Params, cfg: ModelConfig, enc_embeds: jnp.ndarray):
+    """Bidirectional encoder over precomputed frame embeddings."""
+    B, S, D = enc_embeds.shape
+    x = enc_embeds
+    positions = _positions(cfg, B, S, 0)
+
+    def body(x, lp):
+        h, _ = L.gqa_apply(lp["attn"], cfg, L.rms_norm(lp["ln1"], x),
+                           positions, causal=False)
+        x = x + h
+        x = x + L.mlp_apply(lp["mlp"], L.rms_norm(lp["ln2"], x),
+                            cfg.mlp_kind)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(params["enc_norm"], x)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict,
+            cache: Params | None = None, remat: bool = False):
+    """Returns (logits [B,S,V], new_cache, aux_loss).
+
+    batch: {"tokens" [B,S]} or {"embeds" [B,S,D] (+"positions")} and
+    optionally {"enc_embeds"} for enc-dec.
+    """
+    if "tokens" in batch:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = batch["embeds"]
+        B, S, _ = x.shape
+    offset = 0 if cache is None else cache["_pos"]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = _positions(cfg, B, S, offset)
+
+    enc_out = None
+    if cfg.n_enc_layers and "enc_embeds" in batch:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Params = {}
+    for si, seg in enumerate(segments(cfg)):
+        sp = params[f"seg{si}"]
+        sc = cache[f"seg{si}"] if cache is not None else None
+
+        def one_layer(x, lp, lc):
+            x, nc, aux = _layer_apply(seg.kind, lp, cfg, x, positions, lc)
+            if enc_out is not None and seg.kind in ATTN_KINDS:
+                Bx, Sx, Dx = enc_out.shape
+                kv_k = L.apply_dense(lp["xattn"]["wk"], enc_out)
+                kv_v = L.apply_dense(lp["xattn"]["wv"], enc_out)
+                KV = cfg.n_kv_heads
+                hd = cfg.head_dim
+                h, _ = L.gqa_apply(
+                    lp["xattn"], cfg, L.rms_norm(lp["ln3"], x), positions,
+                    cross_kv=(kv_k.reshape(Bx, Sx, KV, hd),
+                              kv_v.reshape(Bx, Sx, KV, hd)))
+                x = x + h
+            return x, nc, aux
+
+        if seg.scanned:
+            def body(carry, xs):
+                x = carry
+                lp, lc = xs
+                x, nc, aux = one_layer(x, lp, lc)
+                return x, (nc, aux)
+
+            if remat and cache is None:
+                body = jax.checkpoint(body)
+            x, (ncs, auxs) = jax.lax.scan(
+                body, x, (sp, sc))
+            aux_total = aux_total + auxs.sum()
+            if cache is not None:
+                new_cache[f"seg{si}"] = ncs
+        else:
+            ncs_list = []
+            for i in range(seg.count):
+                lp = jax.tree.map(lambda t: t[i], sp)
+                lc = (jax.tree.map(lambda t: t[i], sc)
+                      if sc is not None else None)
+                x, nc, aux = one_layer(x, lp, lc)
+                aux_total = aux_total + aux
+                ncs_list.append(nc)
+            if cache is not None:
+                new_cache[f"seg{si}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *ncs_list)
+
+    if cache is not None:
+        new_cache["_pos"] = offset + S
+    x = L.rms_norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = L.apply_dense(params["lm_head"], x)
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict,
+            remat: bool = False):
+    logits, _, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(shapes))

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, compress_grads,
+                               decompress_grads, wsd_schedule)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "compress_grads", "decompress_grads",
+           "wsd_schedule"]

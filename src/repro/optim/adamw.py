@@ -1,0 +1,210 @@
+"""AdamW with configurable moment dtype (fp32 / bf16 / int8-blockwise),
+global-norm clipping, a warmup-stable-decay schedule, and int8 gradient
+compression with error feedback (the cross-pod all-reduce trick).
+
+The int8 moment option is what lets deepseek-v3-671b's optimizer state fit
+512 x 16 GB HBM (see DESIGN.md): blockwise (128) absmax-scaled int8, the
+bitsandbytes-style formulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 128
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment (possibly quantized: (q, scale))
+    nu: Any          # second moment
+    err: Any | None  # error-feedback residual for grad compression (or None)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 moment quantization
+# ---------------------------------------------------------------------------
+
+
+_DYN_K = 65535.0      # companding constant: ~4.8 decades of dynamic range
+
+
+def _q8_encode(x: jnp.ndarray, code: str = "linear"):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    amax = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True),
+                       1e-12)
+    if code == "dynamic":
+        # mu-law companding (bnb-style dynamic quantization): linear int8
+        # zeroes small second moments and Adam explodes; log-spaced codes
+        # keep ~9% relative error across the whole block range.
+        u = jnp.log1p(jnp.abs(blocks) / amax * _DYN_K) / jnp.log1p(_DYN_K)
+        q = jnp.clip(jnp.round(u * 127.0), 0, 127) * jnp.sign(blocks)
+        q = q.astype(jnp.int8)
+    else:
+        q = jnp.clip(jnp.round(blocks / (amax / 127.0)), -127,
+                     127).astype(jnp.int8)
+    return {"q": q, "scale": (amax / 127.0 if code == "linear" else amax
+                              ).astype(jnp.float32),
+            "shape": jnp.asarray(x.shape + (1 if code == "linear" else 2,))}
+
+
+def _q8_decode(enc, shape, code: str = "linear") -> jnp.ndarray:
+    if code == "dynamic":
+        u = jnp.abs(enc["q"].astype(jnp.float32)) / 127.0
+        mag = jnp.expm1(u * jnp.log1p(_DYN_K)) / _DYN_K * enc["scale"]
+        flat = (mag * jnp.sign(enc["q"].astype(jnp.float32))).reshape(-1)
+    else:
+        flat = (enc["q"].astype(jnp.float32) * enc["scale"]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def _moment_like(p, dtype: str):
+    if dtype == "int8":
+        return _q8_encode(jnp.zeros_like(p, jnp.float32), code="dynamic")
+    return jnp.zeros_like(p, jnp.dtype(dtype))
+
+
+def adamw_init(params, moment_dtype: str = "float32",
+               error_feedback: bool = False) -> AdamWState:
+    mu = jax.tree.map(lambda p: _moment_like(p, moment_dtype), params)
+    nu = jax.tree.map(lambda p: _moment_like(p, moment_dtype), params)
+    err = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+           if error_feedback else None)
+    return AdamWState(jnp.zeros((), jnp.int32), mu, nu, err)
+
+
+def _read_moment(m, shape, dtype: str):
+    if dtype == "int8":
+        return _q8_decode(m, shape, code="dynamic")
+    return m.astype(jnp.float32)
+
+
+def _write_moment(x, dtype: str):
+    if dtype == "int8":
+        return _q8_encode(x, code="dynamic")
+    return x.astype(jnp.dtype(dtype))
+
+
+def adamw_update(params, grads, state: AdamWState, *,
+                 lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 moment_dtype: str = "float32"):
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    is_q8 = moment_dtype == "int8"
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        m = _read_moment(mu, p.shape, moment_dtype)
+        v = _read_moment(nu, p.shape, moment_dtype)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        new_p = (p.astype(jnp.float32)
+                 - lr_t * (upd_ + weight_decay * p.astype(jnp.float32)))
+        return (new_p.astype(p.dtype), _write_moment(m, moment_dtype),
+                _write_moment(v, moment_dtype))
+
+    if is_q8:
+        # tree over (params, grads, mu, nu) where mu/nu are dict-encoded
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        flat_mu = _flatten_encoded(state.mu, tdef)
+        flat_nu = _flatten_encoded(state.nu, tdef)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    else:
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step, new_mu, new_nu, state.err)
+
+
+def _flatten_encoded(tree, tdef):
+    """Flatten a tree whose leaves are {"q","scale","shape"} dicts to match
+    the param treedef."""
+    leaves = []
+
+    def rec(node):
+        if isinstance(node, dict) and set(node) == {"q", "scale", "shape"}:
+            leaves.append(node)
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k])
+        elif isinstance(node, (list, tuple)):
+            for x in node:
+                rec(x)
+        else:
+            leaves.append(node)
+
+    rec(tree)
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping / schedule / compression
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1):
+    """Warmup-stable-decay (linear warmup, constant, cosine tail)."""
+    def lr(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0)
+        decay_start = total * (1 - decay_frac)
+        t = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0, 1)
+        return peak_lr * w * (0.5 * (1 + jnp.cos(jnp.pi * t))
+                              if decay_frac > 0 else 1.0)
+    return lr
+
+
+def compress_grads(grads, err):
+    """int8 blockwise compression with error feedback: returns
+    (compressed tree, new_err). Decompress with `decompress_grads` after the
+    cross-pod all-reduce — 4x less ICI traffic on the pod axis."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        enc = _q8_encode(g32)
+        deq = _q8_decode(enc, g.shape)
+        return enc, g32 - deq
+    encs = jax.tree.map(one, grads, err)
+    comp = jax.tree.map(lambda t: t[0], encs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], encs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_err
+
+
+def decompress_grads(comp, shapes):
+    return jax.tree.map(
+        lambda enc, ref: _q8_decode(enc, ref.shape), comp, shapes,
+        is_leaf=lambda n: isinstance(n, dict) and set(n) == {"q", "scale",
+                                                             "shape"})

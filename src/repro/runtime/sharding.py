@@ -1,0 +1,136 @@
+"""NamedSharding rules for the pjit (TP+DP[+pod]) execution path.
+
+Rules are keyed by parameter path suffix; they compose Megatron-style tensor
+parallelism over the ``model`` axis with FSDP-style parameter sharding over
+``data`` for the very large archs, ZeRO-1 optimizer-state sharding, and pod
+data parallelism. The shard_map pipeline path (core/pipeline.py) does its
+own manual sharding and does not use these rules.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# (regex over "/"-joined path, spec builder). Leading layer-stack dims are
+# handled generically: specs below describe the *trailing* dims and are
+# left-padded with None.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("model", "fsdp")),             # [V, D] vocab-parallel
+    (r"lm_head/w$", ("fsdp", "model")),         # [D, V]
+    (r"(wq|wk|wv|wi|wg)/w$", ("fsdp", "model")),
+    (r"(wo|cm_wv)/w$", ("model", "fsdp")),
+    (r"(wq_b|wkv_b|cm_wk)/w$", ("fsdp", "model")),
+    (r"(wq_a|wkv_a)/w$", ("fsdp", None)),
+    (r"router/w$", (None, None)),
+    (r"mlp/(wi|wg)$", ("model", "fsdp", None)),     # MoE expert stacks [E,D,F]
+    (r"mlp/wo$", ("model", None, "fsdp")),          # [E,F,D]
+    (r"(w_input_gate|w_rec_gate)/w$", ("fsdp", "model")),
+    (r"(wx|wy)/w$", ("fsdp", "model")),
+    (r"(ddl_w1|dec_w1)$", ("fsdp", None)),
+    (r"(ddl_w2)$", (None, None, "fsdp")),
+    (r"(dec_w2)$", (None, "fsdp")),
+    (r"shared/(wi|wg)/w$", ("fsdp", "model")),
+    (r"shared/wo/w$", ("model", "fsdp")),
+]
+
+
+def _spec_for(path: str, ndim: int, fsdp: bool) -> P:
+    for pat, dims in _RULES:
+        if re.search(pat, path):
+            trail = [("data" if d == "fsdp" and fsdp else
+                      (None if d == "fsdp" else d)) for d in dims]
+            pad = [None] * (ndim - len(trail))
+            return P(*(pad + trail))
+    return P()  # replicated (norms, biases, small vectors)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
+                    fsdp: bool | None = None) -> Any:
+    """NamedSharding tree matching a params pytree (of ShapeDtypeStructs or
+    arrays). fsdp defaults to on for models too big for TP-only sharding."""
+    if fsdp is None:
+        from repro.models.transformer import param_count
+        # >16B params: shard over the data axis as well (memory roof).
+        fsdp = param_count(cfg) > 16e9
+
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+
+    def shard_one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        spec = _spec_for(pstr, leaf.ndim, fsdp)
+        # Drop axes that do not divide the mesh axis size.
+        fixed = []
+        for dim, ax in zip(leaf.shape, spec + (None,) * (leaf.ndim - len(spec))):
+            if ax is None:
+                fixed.append(None)
+            else:
+                size = mesh.shape[ax]
+                fixed.append(ax if dim % size == 0 and dim >= size else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    specs = [shard_one(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_shape), specs)
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any,
+                    seq_shard: bool = False) -> Any:
+    """Batch dims over (pod, data); optionally shard seq instead when the
+    per-shape batch is too small (32k prefill with batch < data axis)."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    batch_axes = tuple(axes)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        bsz = leaf.shape[0]
+        n = 1
+        for a in batch_axes:
+            n *= mesh.shape[a]
+        if bsz % n == 0 and bsz >= n:
+            return NamedSharding(mesh, P(batch_axes))
+        if seq_shard and leaf.ndim >= 2 and leaf.shape[1] % n == 0:
+            return NamedSharding(mesh, P(None, batch_axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    """KV caches: leaves are layer-stacked [L, B, S, ...]; shard the batch
+    dim (axis 1) over (pod, data) where divisible. kv-heads / latent dims
+    stay replicated (attention math is head-sharded via params)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    nm = mesh.shape.get("model", 1)
+
+    def one(leaf):
+        import jax.numpy as jnp
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            return NamedSharding(mesh, P())   # idx / slot_pos bookkeeping
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % n == 0 and leaf.shape[1] >= n:
+            spec[1] = axes
+        # Long-context KV: also shard the sequence/head dim over `model`
+        # so a 32k cache fits per-device HBM.
+        if leaf.ndim >= 3 and leaf.shape[2] % nm == 0 and leaf.shape[2] >= nm:
+            spec[2] = "model"
+        if not any(spec):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache_shape)
+
+
+def opt_state_shardings(param_sh: Any) -> Any:
+    """ZeRO-1: moments inherit parameter shardings (they are also further
+    split over 'data' when fsdp already shards params there)."""
+    return jax.tree_util.tree_map(lambda s: s, param_sh)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (NOT the 512-device dry-run
+# environment — dryrun.py sets its own XLA_FLAGS). Multi-device tests use
+# their own subprocess or the flag below must already be set externally.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,248 @@
+"""Algorithm 1/2 invariants, optimality, and Table-I-level checks."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import throughput as T
+from repro.core import workload as W
+from repro.core.allocator import (LayerAlloc, _partition_min_max,
+                                  allocate_buffers, allocate_compute,
+                                  engine_cycles, plan_pipeline, total_bram)
+from repro.core.workload import LayerWorkload
+
+THETA = 900
+
+
+def _layers(model):
+    return W.CNN_MODELS[model]().layer_workloads(weight_bits=16)
+
+
+@pytest.mark.parametrize("model", ["vgg16", "alexnet", "zf", "yolo"])
+@pytest.mark.parametrize("objective", ["paper", "exact", "optimal"])
+def test_alg1_invariants(model, objective):
+    layers = _layers(model)
+    allocs = allocate_compute(layers, THETA, objective=objective)
+    total = 0
+    for a in allocs:
+        l = a.layer
+        if l.macs == 0:
+            assert a.theta == 0
+            continue
+        assert a.theta >= l.R * l.S
+        assert a.theta % (l.R * l.S) == 0
+        assert a.Cp <= l.C and a.Mp <= l.M
+        assert a.Cp * a.Mp * l.R * l.S == a.theta
+        total += a.theta
+    assert total <= THETA
+
+
+@pytest.mark.parametrize("model", ["vgg16", "alexnet", "zf", "yolo"])
+def test_optimal_no_worse_than_paper(model):
+    layers = _layers(model)
+    a_paper = allocate_compute(layers, THETA, objective="paper")
+    a_opt = allocate_compute(layers, THETA, objective="optimal")
+    assert T.frame_cycles(a_opt) <= T.frame_cycles(a_paper) * (1 + 1e-9)
+
+
+def test_table1_reproduction_band():
+    """Our allocator must land in the paper's efficiency band (Table I).
+
+    The paper's own numbers are derived from its 8-bit (2 MAC/DSP)
+    configuration; see EXPERIMENTS.md §Paper for the full comparison."""
+    paper_eff = {"vgg16": 0.980, "alexnet": 0.904, "zf": 0.908,
+                 "yolo": 0.984}
+    for model, fn in W.CNN_MODELS.items():
+        layers = fn().layer_workloads(weight_bits=8)
+        allocs = allocate_compute(layers, 2 * THETA - len(layers))
+        eff = T.dsp_efficiency(allocs, macs_per_dsp=2)
+        assert eff > 0.90, (model, eff)
+        assert eff <= 1.0 + 1e-9
+        # at worst a few points under the paper's figure (we beat it on
+        # AlexNet/ZF thanks to the waterfill allocator; YOLO's quoted 98.4%
+        # exceeds the theta-sum feasibility bound we derive in
+        # EXPERIMENTS.md §Paper, so a ~5pt gap there is expected)
+        assert eff >= paper_eff[model] - 0.05, (model, eff)
+
+
+def test_model_complexity_matches_paper():
+    paper_gop = {"vgg16": 30.94, "alexnet": 1.45, "zf": 2.34, "yolo": 40.14}
+    for model, fn in W.CNN_MODELS.items():
+        gop = fn().gop
+        assert abs(gop - paper_gop[model]) / paper_gop[model] < 0.02, \
+            (model, gop)
+
+
+def test_alg2_bandwidth_monotone():
+    layers = _layers("vgg16")
+    allocs = allocate_compute(layers, THETA)
+    base_traffic = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
+                       for a in allocs if a.layer.kind == "conv")
+    allocate_buffers(allocs, bram_total=545 * 2, bandwidth_bytes=1e9,
+                     freq_hz=200e6)
+    after = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
+                for a in allocs if a.layer.kind == "conv")
+    assert after <= base_traffic
+    assert all(a.K >= 1 for a in allocs)
+    assert total_bram(allocs) <= 545 * 2 + 64  # within budget (+1 layer pad)
+
+
+@st.composite
+def layer_lists(draw):
+    n = draw(st.integers(2, 8))
+    out = []
+    for i in range(n):
+        r = draw(st.sampled_from([1, 3, 5, 7]))
+        c = draw(st.integers(1, 64))
+        m = draw(st.integers(1, 64))
+        h = draw(st.sampled_from([7, 14, 28, 56]))
+        out.append(LayerWorkload(
+            name=f"l{i}", macs=h * h * r * r * c * m,
+            weight_bytes=r * r * c * m * 2, act_in_bytes=h * h * c,
+            act_out_bytes=h * h * m, kind="conv", R=r, S=r, stride=1,
+            C=c, M=m, H=h, W=h))
+    return out
+
+
+@given(layer_lists(), st.integers(64, 2048))
+@settings(max_examples=30, deadline=None)
+def test_alg1_property(layers, theta):
+    allocs = allocate_compute(layers, theta)
+    used = sum(a.theta for a in allocs)
+    assert used <= max(theta, sum(l.R * l.S for l in layers))
+    for a in allocs:
+        assert a.theta % (a.layer.R * a.layer.S) == 0
+        assert 1 <= a.Cp <= a.layer.C
+        assert 1 <= a.Mp <= a.layer.M
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=10),
+       st.integers(1, 5))
+@settings(max_examples=50, deadline=None)
+def test_partition_optimal(weights, k):
+    k = min(k, len(weights))
+    bounds, cost = _partition_min_max(weights, k)
+    assert bounds[0] == 0 and bounds[-1] == len(weights)
+    assert len(bounds) == k + 1
+    # verify cost matches the returned boundaries
+    got = max(sum(weights[bounds[i]:bounds[i + 1]]) for i in range(k))
+    assert abs(got - cost) < 1e-6 * max(1.0, cost)
+    # brute force on small instances
+    if len(weights) <= 7:
+        import itertools
+        best = float("inf")
+        n = len(weights)
+        for cuts in itertools.combinations(range(1, n), k - 1):
+            bs = [0, *cuts, n]
+            best = min(best, max(sum(weights[bs[i]:bs[i + 1]])
+                                 for i in range(k)))
+        assert cost <= best + 1e-6
+
+
+def test_plan_pipeline_basic():
+    from repro.configs import ARCHS
+    from repro.core.workload import lm_layer_workloads
+    cfg = ARCHS["qwen2-72b"]
+    layers = lm_layer_workloads(cfg, seq_len=4096, batch=256, mode="train")
+    plan = plan_pipeline(layers, model_axis=16, data_axis=16,
+                         global_batch=256, seq_len=4096, train=True,
+                         d_model=cfg.d_model)
+    assert plan.n_stages * plan.tensor_parallel == 16
+    assert plan.utilization > 0.2
+    assert plan.mem_per_chip < 16e9
+    assert sum(plan.layers_per_stage) == len(layers)
+
+
+def test_engine_cycles_monotone():
+    l = LayerWorkload(name="x", macs=56 * 56 * 9 * 64 * 128,
+                      weight_bytes=9 * 64 * 128 * 2, act_in_bytes=0,
+                      act_out_bytes=0, kind="conv", R=3, S=3, C=64, M=128,
+                      H=56, W=56)
+    prev = None
+    for theta in range(9, 9 * 40, 9):
+        c = engine_cycles(l, theta)
+        if prev is not None:
+            assert c <= prev + 1e-9
+        prev = c
+
+
+def test_stage_stack_nonuniform_boundaries():
+    """The pipeline's stage stacking honors Algorithm-1 boundaries."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.pipeline import stage_stack
+
+    units = {"w": jnp.arange(7.0)[:, None] * jnp.ones((7, 3))}
+    stacked, mask = stage_stack(units, (0, 3, 4, 7))
+    assert stacked["w"].shape == (3, 3, 3)
+    assert np.asarray(mask).tolist() == [
+        [True, True, True], [True, False, False], [True, True, True]]
+    # stage 1 holds only unit 3
+    np.testing.assert_array_equal(np.asarray(stacked["w"][1, 0, :]),
+                                  np.full(3, 3.0))
+
+
+def test_collective_bytes_parser():
+    from repro.launch import hlo_stats as DR
+    hlo = """
+  %p0 = bf16[16,1024]{1,0} parameter(0)
+  %ar = bf16[16,1024]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = bf16[32,1024]{1,0} all-gather(%p0), dimensions={0}
+  %cp = bf16[16,1024]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+"""
+    got = DR.collective_bytes(hlo)
+    assert got["count_per_kind"] == {"all-reduce": 1, "all-gather": 1,
+                                     "collective-permute": 1}
+    assert got["bytes_per_kind"]["all-reduce"] == 16 * 1024 * 2
+    assert got["bytes_per_kind"]["all-gather"] == 16 * 1024 * 2  # operand
+
+
+def test_workload_model_matches_real_param_counts():
+    """The allocator's per-layer weight model must track the executable
+    models within 6% — drift here silently mis-balances the pipeline."""
+    from repro.configs import ARCHS
+    from repro.core.workload import lm_layer_workloads
+    from repro.models.transformer import param_count
+    for name, cfg in ARCHS.items():
+        lw = lm_layer_workloads(cfg, seq_len=4096, batch=256, mode="train")
+        wb = sum(l.weight_bytes for l in lw) / 2
+        pc = param_count(cfg)
+        assert abs(wb / pc - 1) < 0.06, (name, wb / pc)
+
+
+@given(layer_lists(), st.integers(200, 2000), st.floats(1e8, 1e10))
+@settings(max_examples=15, deadline=None)
+def test_alg2_property(layers, bram, bandwidth):
+    """Algorithm 2 invariants on random CNNs: K>=1 everywhere, BRAM within
+    budget (one quantum of slack), bandwidth demand never increased."""
+    allocs = allocate_compute(layers, 512)
+    base = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
+               for a in allocs if a.layer.kind == "conv")
+    allocate_buffers(allocs, bram_total=bram, bandwidth_bytes=bandwidth,
+                     freq_hz=200e6)
+    after = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
+                for a in allocs if a.layer.kind == "conv")
+    assert after <= base
+    assert all(a.K >= 1 for a in allocs)
+
+
+@given(st.lists(st.tuples(
+    st.sampled_from(["all-reduce", "all-gather", "collective-permute",
+                     "reduce-scatter", "all-to-all"]),
+    st.sampled_from(["f32", "bf16", "s8"]),
+    st.integers(1, 64), st.integers(1, 2048)), min_size=0, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_hlo_parser_fuzz(ops):
+    """The collective parser totals synthetic HLO exactly."""
+    from repro.launch import hlo_stats
+    bytes_per = {"f32": 4, "bf16": 2, "s8": 1}
+    lines, want = [], 0
+    for i, (kind, dt, a, b) in enumerate(ops):
+        lines.append(f"  %p{i} = {dt}[{a},{b}]{{1,0}} parameter({i})")
+        lines.append(f"  %c{i} = {dt}[{a},{b}]{{1,0}} {kind}(%p{i}), "
+                     f"replica_groups={{}}")
+        want += a * b * bytes_per[dt]
+    got = hlo_stats.collective_bytes("\n".join(lines))
+    assert got["total_bytes"] == want

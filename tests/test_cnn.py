@@ -1,0 +1,49 @@
+"""CNN substrate: fixed-point vs float forward, graph integrity."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import workload as W
+from repro.models import cnn
+
+
+@pytest.mark.parametrize("model", ["alexnet", "zf"])
+def test_fixed_point_close_to_float(model):
+    m = W.CNN_MODELS[model]()
+    p = cnn.init_params(m, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2),
+                          (1, m.input_hw, m.input_hw, m.input_ch))
+    yf = cnn.forward(p, m, x)
+    y8 = cnn.forward(p, m, x, quantized=True, bits=8)
+    y16 = cnn.forward(p, m, x, quantized=True, bits=16)
+    rel8 = float(jnp.linalg.norm(yf - y8) / jnp.linalg.norm(yf))
+    rel16 = float(jnp.linalg.norm(yf - y16) / jnp.linalg.norm(yf))
+    assert rel8 < 0.15, rel8
+    assert rel16 < 1e-3, rel16
+
+
+def test_vgg_graph_shapes():
+    m = W.vgg16()
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    x = jnp.zeros((1, 224, 224, 3))
+    y = cnn.forward(p, m, x)
+    assert y.shape == (1, 1000)
+
+
+def test_yolo_graph_shapes():
+    m = W.yolo()
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    x = jnp.zeros((1, 448, 448, 3))
+    y = cnn.forward(p, m, x)
+    assert y.shape == (1, 7 * 7 * 30)
+
+
+def test_workload_matches_model_layers():
+    """The allocator's workload graph and the executable model agree."""
+    for name, fn in W.CNN_MODELS.items():
+        m = fn()
+        layers = m.layer_workloads()
+        convs = [l for l in layers if l.kind == "conv"]
+        assert all(l.macs > 0 for l in convs)
+        assert all(l.weight_bytes > 0 for l in convs)

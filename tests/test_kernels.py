@@ -1,0 +1,144 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.conv2d_int8 import ref as conv_ref
+from repro.kernels.conv2d_int8.ops import conv2d_int8
+from repro.kernels.conv2d_int8.kernel import gemm_int8
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.rglru_scan import ref as scan_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+
+
+@pytest.mark.parametrize("n,k,m", [(17, 40, 33), (128, 128, 128),
+                                   (300, 100, 260), (1, 9, 1)])
+def test_gemm_int8_shapes(n, k, m):
+    key = jax.random.PRNGKey(n * k + m)
+    kx, kw = jax.random.split(key)
+    x = jax.random.randint(kx, (n, k), -128, 127, jnp.int8)
+    w = jax.random.randint(kw, (k, m), -50, 50, jnp.int8)
+    shift = jax.random.randint(jax.random.fold_in(key, 2), (m,), 0, 12,
+                               jnp.int32)
+    got = gemm_int8(x, w, shift, interpret=True)
+    want = conv_ref.gemm_int8_ref(x, w, shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(1, 12, 12, 16, 32, 3, 1),
+                                   (2, 9, 9, 8, 24, 5, 2),
+                                   (1, 7, 7, 3, 8, 1, 1),
+                                   (1, 10, 10, 4, 8, 7, 2)])
+def test_conv2d_int8_vs_ref(shape):
+    B, H, W, C, M, R, stride = shape
+    key = jax.random.PRNGKey(sum(shape))
+    kx, kw = jax.random.split(key)
+    x = jax.random.randint(kx, (B, H, W, C), -128, 127, jnp.int8)
+    w = jax.random.randint(kw, (R, R, C, M), -30, 30, jnp.int8)
+    shift = jnp.full((M,), 7, jnp.int32)
+    got = conv2d_int8(x, w, shift, stride=stride, interpret=True)
+    want = conv_ref.conv2d_int8_ref(x, w, shift, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,S,D,chunk", [(1, 64, 8, 16), (2, 128, 32, 64),
+                                         (3, 96, 16, 32), (1, 256, 128, 256)])
+def test_linear_scan_vs_ref(B, S, D, chunk):
+    key = jax.random.PRNGKey(B * S * D)
+    ka, kb = jax.random.split(key)
+    a = jax.random.uniform(ka, (B, S, D), jnp.float32, 0.7, 0.999)
+    b = jax.random.normal(kb, (B, S, D), jnp.float32)
+    got = rglru_scan(a, b, chunk=chunk, interpret=True)
+    want = scan_ref.linear_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(1, 3), st.sampled_from([64, 128]),
+       st.sampled_from([1, 2]), st.sampled_from([32, 64]),
+       st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property(B, S, H, d, causal):
+    key = jax.random.PRNGKey(B * S + H * d)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, d), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, d), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, d), jnp.float32)
+    got = attention(q, k, v, causal=causal, interpret=True)
+    want = attn_ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes_window(dtype):
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, S, H, d = 1, 256, 2, 64
+    q = jax.random.normal(kq, (B, S, H, d), dtype)
+    k = jax.random.normal(kk, (B, S, H, d), dtype)
+    v = jax.random.normal(kv, (B, S, H, d), dtype)
+    got = attention(q, k, v, causal=True, window=64, interpret=True)
+    want = attn_ref.attention_ref(q.astype(jnp.float32),
+                                  k.astype(jnp.float32),
+                                  v.astype(jnp.float32), causal=True,
+                                  window=64)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_model_block_uses_scan_kernel_equivalence():
+    """RG-LRU model path (associative scan) == chunked kernel semantics."""
+    from repro.models.recurrent import rglru_scan as model_scan
+    key = jax.random.PRNGKey(3)
+    B, S, D = 2, 64, 16
+    a = jax.random.uniform(key, (B, S, D), jnp.float32, 0.8, 0.99)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (B, S, D), jnp.float32)
+    want = scan_ref.linear_scan_ref(a, b)
+    got = rglru_scan(a, b, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_gemm_int8_emit_int32():
+    key = jax.random.PRNGKey(11)
+    kx, kw = jax.random.split(key)
+    x = jax.random.randint(kx, (64, 72), -128, 127, jnp.int8)
+    w = jax.random.randint(kw, (72, 40), -50, 50, jnp.int8)
+    got = gemm_int8(x, w, jnp.zeros((40,), jnp.int32), interpret=True,
+                    emit_int32=True)
+    want = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cnn_kernel_path_bit_exact():
+    """The Pallas PE-array kernel inside the full AlexNet fixed-point
+    forward matches the jnp path bit-for-bit."""
+    from repro.core import workload as W
+    from repro.models import cnn
+    m = W.CNN_MODELS["alexnet"]()
+    p = cnn.init_params(m, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2),
+                          (1, m.input_hw, m.input_hw, 3))
+    y_jnp = cnn.forward(p, m, x, quantized=True, bits=8)
+    y_ker = cnn.forward(p, m, x, quantized=True, bits=8, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(y_jnp), np.asarray(y_ker))
+
+
+def test_autotuner_picks_feasible_aligned_blocks():
+    from repro.kernels.autotune import (VMEM_BUDGET, pick_attention_blocks,
+                                        pick_gemm_blocks)
+    c = pick_gemm_blocks(50176, 576, 128, in_bytes=1)
+    assert c.vmem_bytes <= VMEM_BUDGET
+    assert c.bn % 128 == 0 and c.bm % 128 == 0 and c.bk % 128 == 0
+    a = pick_attention_blocks(32768, 128)
+    assert a.vmem_bytes <= VMEM_BUDGET
+    assert a.bq % 128 == 0 and a.bkv % 128 == 0
+    # bigger q tiles amortize kv re-reads: the tuner must not pick the
+    # smallest q tile when VMEM allows larger
+    assert a.bq >= 256

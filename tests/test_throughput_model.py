@@ -1,0 +1,41 @@
+"""Eq. (2)-(4) closed form vs the cycle-accurate simulator."""
+
+import pytest
+
+from repro.core import throughput as T
+from repro.core import workload as W
+from repro.core.allocator import allocate_compute
+from repro.core.simulator import simulate
+
+
+@pytest.mark.parametrize("model", ["vgg16", "alexnet", "zf", "yolo"])
+def test_simulator_matches_analytic(model):
+    layers = W.CNN_MODELS[model]().layer_workloads(weight_bits=16)
+    allocs = allocate_compute(layers, 900)
+    sim = simulate(allocs, n_frames=3)
+    analytic = T.frame_cycles(allocs)
+    # Steady-state per-frame cycles must match Eq. (4) within 10% (the
+    # simulator adds dependency stalls the closed form ignores).
+    assert sim.steady_cycles >= analytic * 0.95
+    assert sim.steady_cycles <= analytic * 1.15, (
+        model, sim.steady_cycles, analytic)
+
+
+def test_simulator_efficiency_close_to_model():
+    layers = W.CNN_MODELS["vgg16"]().layer_workloads(weight_bits=16)
+    allocs = allocate_compute(layers, 900)
+    sim = simulate(allocs, n_frames=4)
+    eff_model = T.dsp_efficiency(allocs)
+    # fill/drain makes the simulated efficiency slightly lower
+    assert sim.dsp_efficiency <= eff_model * 1.02
+    assert sim.dsp_efficiency >= eff_model * 0.7
+
+
+def test_fps_definition():
+    layers = W.CNN_MODELS["alexnet"]().layer_workloads(weight_bits=16)
+    allocs = allocate_compute(layers, 900)
+    fps = T.pipeline_fps(allocs, freq_hz=200e6)
+    assert fps == pytest.approx(200e6 / T.frame_cycles(allocs))
+    g = T.gops(allocs, freq_hz=200e6)
+    assert g == pytest.approx(
+        2 * sum(a.layer.macs for a in allocs) * fps / 1e9)
