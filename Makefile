@@ -1,0 +1,14 @@
+PYTHON ?= python
+
+# Tier-1 verify (ROADMAP.md): the full suite on CPU.
+.PHONY: test
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+.PHONY: test-fast
+test-fast:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q -m "not slow"
+
+.PHONY: bench
+bench:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py all

@@ -1,6 +1,10 @@
 """Table I reproduction: utilization & performance for VGG16 / AlexNet /
 ZF / YOLO on a ZC706-class budget (900 DSPs @ 200 MHz), vs the paper's
-reported numbers and our models of baselines [1] and [3]."""
+reported numbers and our models of baselines [1] and [3].
+
+Every row is derived from a compiled :class:`EngineProgram` — the same
+object the executor runs — so the reported cycles and the executed
+arithmetic come from one plan."""
 
 from __future__ import annotations
 
@@ -10,7 +14,7 @@ from benchmarks.baselines import (dnnbuilder_allocate, recurrent_efficiency,
                                   winograd_fused_model)
 from repro.core import throughput as T
 from repro.core import workload as W
-from repro.core.allocator import allocate_compute, allocate_buffers
+from repro.core.program import compile_model
 from repro.core.simulator import simulate
 
 PAPER = {  # model: (DSP, eff, fps16, gops16, fps8, gops8)
@@ -34,29 +38,30 @@ def run(emit):
     for model, fn in W.CNN_MODELS.items():
         m = fn()
         gop = m.gop
-        # ---- 16-bit: 1 multiplier per DSP
+        # ---- 16-bit: 1 multiplier per DSP (plan-only compile: Alg. 1 + 2)
         t0 = time.time()
-        l16 = m.layer_workloads(weight_bits=16)
-        a16 = allocate_compute(l16, THETA)
+        p16 = compile_model(m, theta=THETA, bits=16, bram_total=545,
+                            bandwidth_bytes=4.2e9, freq_hz=FREQ)
         alloc_us = (time.time() - t0) * 1e6
-        allocate_buffers(a16, bram_total=545, bandwidth_bytes=4.2e9,
-                         freq_hz=FREQ)
+        a16 = p16.allocs
         dsp16 = T.dsps_used(a16)
         eff16 = T.dsp_efficiency(a16)
-        fps16 = T.pipeline_fps(a16, freq_hz=FREQ)
+        fps16 = p16.fps()
         gops16 = T.gops(a16, freq_hz=FREQ)
-        # ---- 8-bit: 2 multipliers per DSP (paper's efficiency regime)
-        l8 = m.layer_workloads(weight_bits=8)
-        a8 = allocate_compute(l8, 2 * THETA - len(l8))
+        # ---- 8-bit: 2 multipliers per DSP (paper's efficiency regime);
+        # compute allocation only, as in Table I's efficiency columns.
+        p8 = compile_model(m, theta=2 * THETA - len(m.layers), bits=8,
+                           bram_total=None, freq_hz=FREQ)
+        a8 = p8.allocs
         dsp8 = T.dsps_used(a8, macs_per_dsp=2)
         eff8 = T.dsp_efficiency(a8, macs_per_dsp=2)
-        fps8 = T.pipeline_fps(a8, freq_hz=FREQ)
+        fps8 = p8.fps()
         gops8 = T.gops(a8, freq_hz=FREQ)
-        # ---- simulator cross-check
-        sim = simulate(a16, n_frames=3)
+        # ---- simulator cross-check on the same program object
+        sim = simulate(p16, n_frames=3)
         p = PAPER[model]
         emit(f"table1/{model}/alloc", alloc_us,
-             f"gop={gop:.2f}|paper_gop_ok={abs(gop-2*sum(x.macs for x in l16)/1e9)<1e-6}")
+             f"gop={gop:.2f}|paper_gop_ok={abs(gop-p16.gop)<1e-6}")
         rows.append((model, dsp16, eff16, fps16, gops16, dsp8, eff8, fps8,
                      gops8, sim.dsp_efficiency, p))
     print("\n== Table I reproduction (This Work columns) ==")
@@ -78,8 +83,8 @@ def run(emit):
     frame_d = max(bound_d, 0.0)
     gops_d = 2 * sum(l.macs for l in l16) * (FREQ / frame_d) / 1e9
     eff_d = 2 * sum(l.macs for l in l16) / (2 * th_d * frame_d)
-    a16 = allocate_compute(l16, THETA)
-    ours = T.gops(a16, freq_hz=FREQ)
+    ours = T.gops(compile_model(W.vgg16(), theta=THETA, bits=16).allocs,
+                  freq_hz=FREQ)
     print("\n== VGG16 vs baselines (modeled / paper-reported) ==")
     print(f"[1] recurrent  : eff={eff_r:.3f} gops16={gops_r:5.0f}"
           f"  (paper-reported: eff=0.585 gops=137 @150MHz)")
@@ -106,10 +111,8 @@ def run(emit):
     paper_bram = {"vgg16": 0.74, "alexnet": 0.84, "zf": 0.58, "yolo": 0.76}
     print("\n== Algorithm 2: BRAM/bandwidth (1090 BRAM18, 4.2 GB/s DDR) ==")
     for model, fn in W.CNN_MODELS.items():
-        layers = fn().layer_workloads(weight_bits=16)
-        allocs = allocate_compute(layers, THETA)
-        allocate_buffers(allocs, bram_total=1090, bandwidth_bytes=4.2e9,
-                         freq_hz=FREQ, act_bytes=2)
+        allocs = compile_model(fn(), theta=THETA, bits=16, bram_total=1090,
+                               bandwidth_bytes=4.2e9, freq_hz=FREQ).allocs
         bram18 = total_bram(allocs, act_bytes=2)
         traffic = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
                       for a in allocs if a.layer.kind == "conv")

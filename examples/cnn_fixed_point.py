@@ -1,6 +1,8 @@
-"""The paper's own workload end-to-end: AlexNet inference in channel-wise
-fixed point (int8 MACs, 32-bit partial sums, shift alignment) vs float,
-plus the allocator's predicted accelerator throughput for the same model.
+"""The paper's own workload end-to-end: AlexNet inference through a
+compiled EngineProgram — Algorithms 1/2 run once, po2 scales frozen from a
+calibration batch, int8 activations end-to-end with the fused
+bias/ReLU/shift epilogue — vs the float reference, plus the *same* plan's
+predicted accelerator throughput (one object drives both).
 
   PYTHONPATH=src python examples/cnn_fixed_point.py
 """
@@ -9,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import throughput as T
-from repro.core.allocator import allocate_compute
+from repro.core.program import compile_model
+from repro.core.simulator import simulate
 from repro.core.workload import CNN_MODELS
 from repro.models import cnn
 
@@ -17,20 +20,28 @@ m = CNN_MODELS["alexnet"]()
 params = cnn.init_params(m, jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (4, m.input_hw, m.input_hw, 3))
 
+# One compile: allocation + calibration + lowering (8-bit, 900 DSPs
+# double-pumped = 2 * 900 - n_layers multiplier budget).
+prog = compile_model(m, params, theta=1800 - 11, bits=8, calib_batch=x)
+# 16-bit: one multiplier per DSP, so the plain 900-DSP budget.
+prog16 = compile_model(m, params, theta=900, bits=16, calib_batch=x)
+
 y_float = cnn.forward(params, m, x)
-y_int8 = cnn.forward(params, m, x, quantized=True, bits=8)
-y_int16 = cnn.forward(params, m, x, quantized=True, bits=16)
+y_int8 = prog.run(x)
+y_int16 = prog16.run(x)
 
 rel8 = float(jnp.linalg.norm(y_float - y_int8) / jnp.linalg.norm(y_float))
 rel16 = float(jnp.linalg.norm(y_float - y_int16) / jnp.linalg.norm(y_float))
 top1_agree = float((jnp.argmax(y_float, -1) == jnp.argmax(y_int8, -1)).mean())
-print(f"{m.name}: GOP={m.gop:.2f}")
+print(f"{m.name}: GOP={prog.gop:.2f}")
 print(f"int8  vs float rel-err {rel8:.4f}  (top-1 agreement "
       f"{top1_agree:.0%})")
 print(f"int16 vs float rel-err {rel16:.6f}")
 
-allocs = allocate_compute(m.layer_workloads(weight_bits=8), 1800 - 11)
+# The same program object answers the throughput questions (Table I).
+sim = simulate(prog, n_frames=3)
 print(f"\naccelerator plan (8-bit, 900 DSPs double-pumped):")
-print(f"  DSP efficiency {T.dsp_efficiency(allocs, macs_per_dsp=2):.3f}, "
-      f"{T.pipeline_fps(allocs, freq_hz=200e6):.0f} fps, "
-      f"{T.gops(allocs, freq_hz=200e6):.0f} GOPS")
+print(f"  DSP efficiency {T.dsp_efficiency(prog.allocs, macs_per_dsp=2):.3f}"
+      f" (simulated {sim.dsp_efficiency:.3f}), "
+      f"{T.pipeline_fps(prog.allocs, freq_hz=200e6):.0f} fps, "
+      f"{T.gops(prog.allocs, freq_hz=200e6):.0f} GOPS")

@@ -1,0 +1,67 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the newest jax spellings (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``); on older jaxlib
+(e.g. the pinned 0.4.x CPU image) these fall back to the experimental /
+thread-resource equivalents with identical call sites.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _LEGACY_SHARD_MAP = False
+except AttributeError:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _LEGACY_SHARD_MAP = True
+
+
+def shard_map(f=None, **kwargs):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename and
+    no-positional-function (decorator via functools.partial) use handled."""
+    if _LEGACY_SHARD_MAP and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if f is None:
+        return lambda g: shard_map(g, **kwargs)
+    return _shard_map(f, **kwargs)
+
+
+try:
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+
+    def _ambient_mesh():
+        m = get_abstract_mesh()
+        return None if m is None or not m.axis_names else m
+except AttributeError:  # jax < 0.5: read the thread-resource mesh
+    def get_abstract_mesh():
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+
+    _ambient_mesh = get_abstract_mesh
+
+
+def ambient_mesh():
+    """The mesh made current by :func:`set_mesh`, or None outside one."""
+    return _ambient_mesh()
+
+
+try:
+    set_mesh = jax.set_mesh
+except AttributeError:  # jax < 0.6: Mesh is itself the context manager
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

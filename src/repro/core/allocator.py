@@ -55,30 +55,40 @@ class LayerAlloc:
         return self.t_row / max(self.K, 1)
 
 
-def _decompose_theta(theta_pe: int, C: int, M: int) -> tuple[int, int]:
-    """Split ``theta_pe`` (= theta/(R*S)) into (C', M') minimizing the cycle
-    count ceil(C/C')*ceil(M/M') — line 9 of Algorithm 1.
+def _decompose_theta(theta_pe: int, C: int, M: int,
+                     cycle_model: str = "packed") -> tuple[int, int]:
+    """Split ``theta_pe`` (= theta/(R*S)) into (C', M') — line 9 of Alg. 1.
 
     The paper's flexible activation buffer removes the power-of-two and
-    producer/consumer-matching constraints, so any factor pair is legal.
+    producer/consumer-matching constraints, so any (C', M') with
+    ``C'*M' <= theta_pe`` is legal — the pair need not factor theta_pe
+    exactly (non-divisor budgets would otherwise clamp out of bounds; the
+    old divisor-only fallback could do exactly that).
+
+    Under the packed cycle model a row costs ``ceil(W*C*M / (C'*M'))``, so
+    the best split maximizes the PE product; under the strict ceil model it
+    minimizes ``ceil(C/C')*ceil(M/M')`` and, on ties, the PE count (fewer
+    multipliers for the same cycles = strictly better DSP efficiency).
+    Always returns ``1 <= C' <= C``, ``1 <= M' <= M``, ``C'*M' <= theta_pe``.
     """
     t = max(1, theta_pe)
+    if t >= C * M:
+        return C, M
     best: tuple[int, int] | None = None
-    best_cost = math.inf
-    for cp in range(1, t + 1):
-        if t % cp:
-            continue
-        mp = t // cp
-        if cp > C or mp > M:
-            continue
-        cost = math.ceil(C / cp) * math.ceil(M / mp)
-        if (cost < best_cost
-                or (cost == best_cost and best is not None
-                    and abs(cp - mp) < abs(best[0] - best[1]))):
-            best, best_cost = (cp, mp), cost
-    if best is None:
-        # theta_pe exceeds C*M — clamp to full parallelism.
-        return min(C, t), min(M, max(1, t // min(C, t)))
+    best_key: tuple | None = None
+    for cp in range(1, min(C, t) + 1):
+        mp = min(M, t // cp)
+        if cycle_model == "packed":
+            key = (-(cp * mp), abs(cp - mp))
+        else:
+            # Same ceil(M/mp) is reachable with the minimal mp in its
+            # block — shrink so equal-cycle splits spend fewer PEs.
+            mp = math.ceil(M / math.ceil(M / mp))
+            key = (math.ceil(C / cp) * math.ceil(M / mp), cp * mp,
+                   abs(cp - mp))
+        if best_key is None or key < best_key:
+            best, best_key = (cp, mp), key
+    assert best is not None
     return best
 
 
@@ -106,7 +116,7 @@ def engine_cycles(l: LayerWorkload, theta: int,
         if l.kind == "fc":
             return float(math.ceil(work / pe))
         return float(l.H * math.ceil(l.W * work / pe))
-    cp, mp = _decompose_theta(pe, l.C, l.M)
+    cp, mp = _decompose_theta(pe, l.C, l.M, cycle_model="ceil")
     cycles = math.ceil(l.C / cp) * math.ceil(l.M / mp)
     if l.kind == "fc":
         return float(cycles)
@@ -289,7 +299,8 @@ def _finalize(layers: Sequence[LayerWorkload], theta: dict[str, int],
         if l.macs == 0:
             allocs.append(LayerAlloc(l, 0, 1, 1, cycle_model=cycle_model))
             continue
-        cp, mp = _decompose_theta(theta[l.name] // (l.R * l.S), l.C, l.M)
+        cp, mp = _decompose_theta(theta[l.name] // (l.R * l.S), l.C, l.M,
+                                  cycle_model=cycle_model)
         allocs.append(LayerAlloc(l, cp * mp * l.R * l.S, cp, mp,
                                  cycle_model=cycle_model))
     return allocs

@@ -38,7 +38,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import recurrent as R
 
-shard_map = jax.shard_map
+from repro.compat import shard_map
 
 Params = dict[str, Any]
 

@@ -1,0 +1,350 @@
+"""Compiled engine programs: one plan drives execution, simulation and
+benchmarks.
+
+The paper's central object is a *balanced plan*: per-layer workloads
+(Section 3), the multiplier/buffer allocation that balances them
+(Algorithms 1/2), and the fixed-point formats the engines exchange
+(Fig. 3(c)). :func:`compile_model` materializes that plan once as an
+:class:`EngineProgram`:
+
+1. **allocate** — Algorithms 1 and 2 run once over the model's
+   :class:`~repro.core.workload.LayerWorkload` graph, producing the
+   per-engine ``LayerAlloc``s every consumer shares (``program.allocs``
+   feeds ``simulator.simulate`` and the throughput model directly).
+2. **calibrate** — a float forward over ``calib_batch`` records per-layer
+   activation ranges; per-tensor activation exponents and per-output-channel
+   weight exponents are frozen, weights are quantized *once* (int8 + a shift
+   schedule), and biases are pre-scaled onto each engine's 32-bit
+   accumulator format.
+3. **lower** — each layer becomes an :class:`EngineStep` whose bias-add,
+   ReLU and requantize-to-int8 are fused into the GEMM epilogue
+   (`kernels/conv2d_int8`), so activations stay int8 end-to-end: no
+   per-forward ``quantize_po2``, no float32 bounce between layers.
+
+``run(x)`` executes the program either through the Pallas PE-array kernels
+(``use_kernel=True``; interpret mode on CPU) or through a pure-jnp integer
+oracle — the two are bit-identical, which is what ``tests/test_program.py``
+pins down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.allocator import (LayerAlloc, allocate_buffers,
+                                  allocate_compute)
+from repro.core.workload import CNNModel, ConvLayer
+
+Params = dict[str, Any]
+
+# ZC706-class board defaults (the paper's Table I setting).
+DEFAULT_THETA = 900
+DEFAULT_BRAM = 1090
+DEFAULT_BW = 4.2e9
+DEFAULT_FREQ = 200e6
+
+
+# ---------------------------------------------------------------------------
+# Shared float executor (the calibration reference and the fp32 model path)
+# ---------------------------------------------------------------------------
+
+
+def float_forward(params: Params, model: CNNModel, x: jnp.ndarray,
+                  record: dict[str, float] | None = None) -> jnp.ndarray:
+    """Reference float forward over the model graph (NHWC). With ``record``
+    it doubles as the calibration pass: per-layer output amax (post-ReLU
+    for hidden layers — what the next engine actually consumes) is stored
+    under the layer name, the network input under ``"__input__"``."""
+    if record is not None:
+        record["__input__"] = float(jnp.max(jnp.abs(x)))
+    hw = x.shape[1]
+    last = [l for l in model.layers if l.kind != "pool"][-1]
+    for lyr in model.layers:
+        out_hw = lyr.out_hw(hw)
+        if lyr.kind == "pool":
+            lo, hi = lyr.padding(hw)
+            x = -jax.lax.reduce_window(
+                -x, jnp.inf, jax.lax.min,
+                (1, lyr.kernel, lyr.kernel, 1),
+                (1, lyr.stride, lyr.stride, 1),
+                ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+        elif lyr.kind == "fc":
+            x = x.reshape(x.shape[0], -1)
+            w, b = params[lyr.name]["w"], params[lyr.name]["b"]
+            x = x @ w + b
+            if lyr is not last:
+                x = jax.nn.relu(x)
+            if record is not None:
+                record[lyr.name] = float(jnp.max(jnp.abs(x)))
+        else:
+            w, b = params[lyr.name]["w"], params[lyr.name]["b"]
+            lo, hi = lyr.padding(hw)
+            x = jax.lax.conv_general_dilated(
+                x, w, (lyr.stride, lyr.stride), ((lo, hi), (lo, hi)),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=lyr.groups)
+            x = x + b
+            if lyr is not last:
+                x = jax.nn.relu(x)
+            if record is not None:
+                record[lyr.name] = float(jnp.max(jnp.abs(x)))
+        hw = out_hw
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Lowered steps
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineStep:
+    """One pipeline engine, fully lowered: quantized weights, the frozen
+    shift schedule, and the spatial plumbing the kernel needs."""
+
+    name: str
+    kind: str                      # "conv" | "fc" | "pool"
+    layer: ConvLayer
+    pad: tuple[int, int]           # (lo, hi), both spatial dims
+    # compute-step payload (None for pool):
+    wq: jnp.ndarray | None = None          # int8/int16 quantized weights
+    bias_q: jnp.ndarray | None = None      # int32 bias on the acc format
+    shift: jnp.ndarray | None = None       # int32 [M]: e_out - (e_in+e_w)
+    e_in: int = 0                          # input activation exponent
+    e_w: np.ndarray | None = None          # int [M] weight exponents
+    e_out: int = 0                         # output activation exponent
+    relu: bool = False
+    requantize: bool = True        # False on the last engine (emit acc32)
+
+
+@dataclasses.dataclass
+class EngineProgram:
+    """The compiled plan. ``allocs`` is the single source of truth for
+    cycles (simulator / throughput model / Table I); ``steps`` is the
+    executable lowering of the same layers."""
+
+    model: CNNModel
+    bits: int
+    theta_total: int
+    allocs: list[LayerAlloc]
+    steps: list[EngineStep] | None = None
+    e_input: int = 0
+    freq_hz: float = DEFAULT_FREQ
+
+    # -- analytics ----------------------------------------------------------
+
+    @property
+    def gop(self) -> float:
+        return self.model.gop
+
+    def frame_cycles(self) -> float:
+        from repro.core import throughput as T
+        return T.frame_cycles(self.allocs)
+
+    def fps(self) -> float:
+        from repro.core import throughput as T
+        return T.pipeline_fps(self.allocs, freq_hz=self.freq_hz)
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, x: jnp.ndarray, *, use_kernel: bool = False,
+            interpret: bool | None = None) -> jnp.ndarray:
+        """Fixed-point forward. ``x`` is float NHWC; returns float logits
+        (the final engine's 32-bit accumulators on their exact po2 scale).
+        All intermediate activations are int8 (int16 for bits=16)."""
+        if self.steps is None:
+            raise ValueError(
+                "plan-only program (compiled without params) cannot run")
+        if interpret is None:
+            interpret = jax.devices()[0].platform != "tpu"
+        if use_kernel and self.bits > 8:
+            raise NotImplementedError(
+                "the Pallas PE-array kernel is int8; bits=16 runs the "
+                "jnp oracle (48-bit DSP accumulation model)")
+        xq = quant.quantize_to_exponent(x, self.e_input, self.bits)
+        for step in self.steps:
+            if step.kind == "pool":
+                xq = _pool_int(xq, step)
+            elif use_kernel:
+                xq = _step_kernel(xq, step, interpret)
+            else:
+                xq = _step_oracle(xq, step, self.bits)
+        last = [s for s in self.steps if s.kind != "pool"][-1]
+        scale = jnp.exp2(jnp.asarray(last.e_in + last.e_w, jnp.float32))
+        return xq.astype(jnp.float32) \
+            * scale.reshape((1,) * (xq.ndim - 1) + (-1,))
+
+
+# ---------------------------------------------------------------------------
+# Step executors
+# ---------------------------------------------------------------------------
+
+
+def _pool_int(xq: jnp.ndarray, step: EngineStep) -> jnp.ndarray:
+    """Max pool directly on the integer activations — max is monotone in
+    the po2 format, so this is exact and the exponent passes through."""
+    lyr = step.layer
+    lo, hi = step.pad
+    # bits=16 models accumulators in float32, so the last engine's output
+    # (requantize=False) may reach a trailing pool as floats.
+    init = jnp.array(-jnp.inf if jnp.issubdtype(xq.dtype, jnp.floating)
+                     else jnp.iinfo(xq.dtype).min, xq.dtype)
+    return jax.lax.reduce_window(
+        xq, init, jax.lax.max,
+        (1, lyr.kernel, lyr.kernel, 1), (1, lyr.stride, lyr.stride, 1),
+        ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+
+
+def _step_kernel(xq: jnp.ndarray, step: EngineStep,
+                 interpret: bool) -> jnp.ndarray:
+    from repro.kernels.conv2d_int8.ops import conv2d_int8, fc_int8
+    lyr = step.layer
+    emit = not step.requantize
+    if step.kind == "fc":
+        return fc_int8(xq.reshape(xq.shape[0], -1), step.wq, step.shift,
+                       step.bias_q, relu=step.relu, interpret=interpret,
+                       emit_int32=emit)
+    return conv2d_int8(xq, step.wq, step.shift, step.bias_q,
+                       stride=lyr.stride, padding=(step.pad, step.pad),
+                       groups=lyr.groups, relu=step.relu,
+                       interpret=interpret, emit_int32=emit)
+
+
+def _step_oracle(xq: jnp.ndarray, step: EngineStep, bits: int) -> jnp.ndarray:
+    """Pure-jnp integer oracle with the identical fused epilogue. For
+    bits<=8 the arithmetic is exact int32 (bit-identical to the Pallas
+    kernel); bits=16 models the DSP48's 48-bit accumulate in float32."""
+    lyr = step.layer
+    exact = bits <= 8
+    acc_dt = jnp.int32 if exact else jnp.float32
+    if step.kind == "fc":
+        acc = jnp.matmul(xq.reshape(xq.shape[0], -1).astype(acc_dt),
+                         step.wq.astype(acc_dt),
+                         preferred_element_type=acc_dt)
+    else:
+        lo, hi = step.pad
+        acc = jax.lax.conv_general_dilated(
+            xq.astype(acc_dt), step.wq.astype(acc_dt),
+            (lyr.stride, lyr.stride), ((lo, hi), (lo, hi)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=lyr.groups,
+            preferred_element_type=acc_dt)
+    if exact and step.requantize:
+        # Same fused epilogue as the kernel, from the shared oracle.
+        from repro.kernels.conv2d_int8.ref import requantize_ref
+        flat = requantize_ref(acc.reshape(-1, acc.shape[-1]), step.shift,
+                              step.bias_q, step.relu)
+        return flat.reshape(acc.shape)
+    bias = step.bias_q.astype(acc_dt)
+    acc = acc + bias.reshape((1,) * (acc.ndim - 1) + (-1,))
+    if step.relu:
+        acc = jnp.maximum(acc, 0)
+    if not step.requantize:
+        return acc
+    # bits=16: floor(acc / 2^sh) — the shifter's truncation in float.
+    sh = step.shift.reshape((1,) * (acc.ndim - 1) + (-1,))
+    y = jnp.floor(acc * jnp.exp2(-sh.astype(jnp.float32)))
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.clip(y, -qmax - 1, qmax).astype(jnp.int16)
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+
+def compile_model(model: CNNModel, params: Params | None = None, *,
+                  theta: int = DEFAULT_THETA, bits: int = 8,
+                  calib_batch: jnp.ndarray | None = None,
+                  bram_total: int | None = DEFAULT_BRAM,
+                  bandwidth_bytes: float = DEFAULT_BW,
+                  freq_hz: float = DEFAULT_FREQ,
+                  objective: str = "optimal") -> EngineProgram:
+    """Workload -> allocation -> execution, compiled once.
+
+    Without ``params`` this produces a *plan-only* program (Algorithms 1/2
+    only) for the simulator and benchmarks. With ``params`` (and a
+    ``calib_batch`` for activation ranges) the program is fully lowered and
+    runnable. ``bram_total=None`` skips Algorithm 2 (compute allocation
+    only, all K=1).
+    """
+    workloads = model.layer_workloads(weight_bits=bits)
+    allocs = allocate_compute(workloads, theta, objective=objective)
+    if bram_total is not None:
+        allocate_buffers(allocs, bram_total=bram_total,
+                         bandwidth_bytes=bandwidth_bytes, freq_hz=freq_hz,
+                         act_bytes=bits // 8)
+    prog = EngineProgram(model=model, bits=bits, theta_total=theta,
+                         allocs=allocs, freq_hz=freq_hz)
+    if params is None:
+        return prog
+
+    if calib_batch is None:
+        raise ValueError("compiling an executable program needs a "
+                         "calib_batch to freeze activation formats")
+    amax: dict[str, float] = {}
+    float_forward(params, model, calib_batch, record=amax)
+    prog.e_input = quant.po2_exponent(amax["__input__"], bits)
+    prog.steps = _lower(model, params, amax, prog.e_input, bits)
+    return prog
+
+
+def _lower(model: CNNModel, params: Params, amax: dict[str, float],
+           e_input: int, bits: int) -> list[EngineStep]:
+    steps: list[EngineStep] = []
+    compute = [l for l in model.layers if l.kind != "pool"]
+    last = compute[-1]
+    hw = model.input_hw
+    e_act = e_input
+    for lyr in model.layers:
+        pad = lyr.padding(hw)
+        if lyr.kind == "pool":
+            steps.append(EngineStep(name=lyr.name, kind="pool", layer=lyr,
+                                    pad=pad))
+            hw = lyr.out_hw(hw)
+            continue
+        w = params[lyr.name]["w"]
+        b = params[lyr.name]["b"]
+        e_w = np.asarray(quant.po2_scale(w, axis=-1, bits=bits), np.int64)
+        is_last = lyr is last
+        e_out = quant.po2_exponent(amax[lyr.name], bits)
+        # Floor each channel's weight format so (a) its bias fits the
+        # int32 accumulator and (b) the output shift stays within the
+        # 31-bit shifter. Without this, a channel with numerically-dead
+        # weights but a significant bias would get an absurdly fine
+        # accumulator scale, saturating bias_q and silently dropping the
+        # bias; flooring e_w instead rounds the dead weights to zero and
+        # keeps the bias exactly representable.
+        b_np = np.asarray(b, np.float64)
+        nz = np.abs(b_np) > 0
+        b_mag = np.full(b_np.shape, -(10 ** 9), np.int64)
+        b_mag[nz] = np.ceil(np.log2(np.abs(b_np[nz])))
+        e_w = np.maximum(e_w, np.maximum(b_mag - 30, e_out - 31) - e_act)
+        # Quantize weights once onto the (possibly floored) formats.
+        qmax = 2 ** (bits - 1) - 1
+        scale = jnp.exp2(-jnp.asarray(e_w, jnp.float32)).reshape(
+            (1,) * (w.ndim - 1) + (-1,))
+        wq = jnp.clip(jnp.round(w * scale), -qmax - 1, qmax).astype(
+            jnp.int8 if bits <= 8 else jnp.int16)
+        # Bias pre-scaled onto this engine's 32-bit accumulator format
+        # (value = q * 2^(e_in + e_w[m])).
+        acc_e = e_act + e_w
+        bias_q = np.clip(np.round(b_np / np.exp2(acc_e)),
+                         np.iinfo(np.int32).min, np.iinfo(np.int32).max
+                         ).astype(np.int32)
+        shift = np.clip(e_out - acc_e, -31, 31).astype(np.int32)
+        steps.append(EngineStep(
+            name=lyr.name, kind=lyr.kind, layer=lyr, pad=pad,
+            wq=jnp.asarray(wq), bias_q=jnp.asarray(bias_q),
+            shift=jnp.asarray(shift), e_in=e_act, e_w=e_w, e_out=e_out,
+            relu=not is_last, requantize=not is_last))
+        e_act = e_out
+        hw = lyr.out_hw(hw)
+    return steps

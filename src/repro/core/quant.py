@@ -29,6 +29,22 @@ def po2_scale(x: jnp.ndarray, axis, bits: int = 8) -> jnp.ndarray:
     return e
 
 
+def po2_exponent(amax: float, bits: int = 8) -> int:
+    """Smallest integer e with ``amax / 2^e <= qmax`` — the frozen
+    per-tensor activation format a calibration pass records."""
+    import math
+    qmax = 2 ** (bits - 1) - 1
+    return math.ceil(math.log2(max(float(amax), 1e-12) / qmax))
+
+
+def quantize_to_exponent(x: jnp.ndarray, e: int, bits: int = 8):
+    """Quantize onto a *given* po2 format (compile-time frozen scale):
+    ``q = clip(round(x / 2^e))`` as int8/int16."""
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x * (2.0 ** (-e))), -qmax - 1, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int16)
+
+
 def quantize_po2(x: jnp.ndarray, axis: int, bits: int = 8):
     """-> (q int8/int16, e int32 per-channel): x ~= q * 2^e."""
     e = po2_scale(x, axis, bits)
@@ -57,14 +73,33 @@ def align_partial_sums(psum: jnp.ndarray, e_in: jnp.ndarray,
     return jnp.left_shift(psum, jnp.maximum(sh, 0)) >> jnp.maximum(-sh, 0)
 
 
+def saturating_signed_shift(acc32: jnp.ndarray,
+                            shift: jnp.ndarray) -> jnp.ndarray:
+    """``acc >> shift`` with truncation for ``shift >= 0`` and a
+    *saturating* left shift for ``shift < 0`` — no int32 wraparound, so a
+    downstream clip onto int8/int16 rails sees the true sign.
+
+    The left-shift amount is capped at 16: every nonzero value shifted
+    left 16 already exceeds the int16 (a fortiori int8) rails, so the cap
+    is bit-neutral for any consumer clipping to <= 16-bit outputs, and it
+    keeps the preimage clamp nondegenerate (at a full 31-bit shift the
+    clamp bound collapses to 0 and would zero positive values). Plain jnp
+    ops — shared by :func:`requantize_output` and the Pallas GEMM epilogue
+    (`kernels/conv2d_int8/kernel.py`)."""
+    sh = jnp.asarray(shift, jnp.int32)
+    sl = jnp.minimum(jnp.maximum(-sh, 0), 16)
+    lo32 = jnp.right_shift(jnp.iinfo(jnp.int32).min, sl)
+    hi32 = jnp.right_shift(jnp.iinfo(jnp.int32).max, sl)
+    return jnp.where(sh >= 0,
+                     jnp.right_shift(acc32, jnp.minimum(sh, 31)),
+                     jnp.left_shift(jnp.clip(acc32, lo32, hi32), sl))
+
+
 def requantize_output(acc32: jnp.ndarray, e_acc: jnp.ndarray | int,
                       e_out: jnp.ndarray | int, bits: int = 8) -> jnp.ndarray:
     """Right-shift + truncate 32-bit accumulators to the output activation
     format (paper: "partial sums should be right shifted and truncated")."""
-    shift = jnp.asarray(e_out - e_acc, jnp.int32)
-    y = jnp.where(shift >= 0,
-                  jnp.right_shift(acc32, jnp.maximum(shift, 0)),
-                  jnp.left_shift(acc32, jnp.maximum(-shift, 0)))
+    y = saturating_signed_shift(acc32, jnp.asarray(e_out - e_acc, jnp.int32))
     qmax = 2 ** (bits - 1) - 1
     dt = jnp.int8 if bits <= 8 else jnp.int16
     return jnp.clip(y, -qmax - 1, qmax).astype(dt)

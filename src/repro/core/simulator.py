@@ -30,9 +30,14 @@ class SimResult:
 def simulate(allocs: Sequence[LayerAlloc], n_frames: int = 2) -> SimResult:
     """Event-driven simulation over ``n_frames`` consecutive frames.
 
+    Accepts either a sequence of :class:`LayerAlloc` or any object exposing
+    an ``allocs`` attribute (e.g. :class:`repro.core.program.EngineProgram`),
+    so the simulator consumes the same compiled plan as the executor.
+
     Returns per-frame steady-state cycles measured between the completion of
     consecutive frames, which is what Eq. (4) predicts.
     """
+    allocs = getattr(allocs, "allocs", allocs)
     engines = [a for a in allocs if a.layer.macs > 0]
     n = len(engines)
 
@@ -44,6 +49,7 @@ def simulate(allocs: Sequence[LayerAlloc], n_frames: int = 2) -> SimResult:
         l = a.layer
         groups = max(1, math.ceil(l.H / max(1, a.K))) if l.kind == "conv" else 1
         finish.append([0.0] * (groups * n_frames))
+    busy_acc = [0.0] * n
 
     for f in range(n_frames):
         for i, a in enumerate(engines):
@@ -78,7 +84,14 @@ def simulate(allocs: Sequence[LayerAlloc], n_frames: int = 2) -> SimResult:
                 t_self = finish[i][base + g - 1] if (g > 0 or f > 0) else 0.0
                 if g == 0 and f > 0:
                     t_self = finish[i][base - 1]
-                dur = a.t_row if l.kind == "conv" else a.t_row
+                if l.kind == "conv":
+                    # The last row-group of a frame may cover fewer than K
+                    # output rows (H % K != 0); charge only its actual rows.
+                    rows = min(max(1, a.K), l.H - g * max(1, a.K))
+                    dur = rows * a.t_per_output_row
+                else:
+                    dur = a.t_row
+                busy_acc[i] += dur
                 finish[i][base + g] = max(t_dep, t_self) + dur
         frame_done.append(finish[-1][(f + 1) * len(finish[-1]) // n_frames - 1])
 
@@ -87,7 +100,7 @@ def simulate(allocs: Sequence[LayerAlloc], n_frames: int = 2) -> SimResult:
         if n_frames > 1 else makespan
 
     total_span = frame_done[-1]
-    busy = tuple(a.t_row * len(finish[i]) for i, a in enumerate(engines))
+    busy = tuple(busy_acc)
     idle = tuple(1.0 - min(1.0, b / total_span) for b in busy)
     theta_total = sum(a.theta for a in engines)
     # steady-state efficiency (per-frame rate once the pipe is full);

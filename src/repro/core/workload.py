@@ -78,6 +78,15 @@ class ConvLayer:
             return self.out_size
         return in_hw // self.stride
 
+    def padding(self, in_hw: int) -> tuple[int, int]:
+        """Explicit (lo, hi) spatial padding reproducing each model's
+        published output sizes (SAME for stride-1, VALID-like for the
+        stride-k stems; asymmetric when the arithmetic demands it)."""
+        out_hw = self.out_hw(in_hw)
+        need = max((out_hw - 1) * self.stride + self.kernel - in_hw, 0)
+        lo = need // 2
+        return lo, need - lo
+
 
 @dataclasses.dataclass(frozen=True)
 class CNNModel:

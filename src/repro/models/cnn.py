@@ -3,31 +3,28 @@ ZF, YOLO) as runnable networks, in float and in the paper's channel-wise
 fixed-point arithmetic (int8/int16 MACs, 32-bit accumulation, shift-aligned
 per-channel formats).
 
-The layer graph comes from ``repro.core.workload`` (single source of truth
-for both the allocator and the executable model). NHWC layout.
+The layer graph comes from ``repro.core.workload`` and execution is owned by
+``repro.core.program`` (single source of truth for the allocator, the
+simulator, and the runnable model): ``forward(quantized=True)`` is a thin
+wrapper that compiles an :class:`~repro.core.program.EngineProgram` —
+freezing po2 scales on the given batch — and runs it, so the fixed-point
+pipeline here is byte-for-byte the one the benchmarks cycle-count. NHWC
+layout.
 """
 
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
-from repro.core.workload import CNNModel, ConvLayer
+from repro.core.program import compile_model, float_forward
+from repro.core.workload import CNNModel
 
 Params = dict[str, Any]
-
-
-def _pad_for(lyr: ConvLayer, in_hw: int, out_hw: int) -> tuple[int, int]:
-    """Explicit symmetric-ish padding reproducing each model's published
-    output sizes (SAME for stride-1, VALID-like for the stride-k stems)."""
-    need = (out_hw - 1) * lyr.stride + lyr.kernel - in_hw
-    need = max(need, 0)
-    lo = need // 2
-    return lo, need - lo
 
 
 def init_params(model: CNNModel, key=None, dtype=jnp.float32) -> Params:
@@ -38,7 +35,9 @@ def init_params(model: CNNModel, key=None, dtype=jnp.float32) -> Params:
         if lyr.kind == "pool":
             hw = lyr.out_hw(hw)
             continue
-        k = jax.random.fold_in(key, hash(lyr.name) % (2 ** 31))
+        # stable per-layer fold (builtin str hash is salted per process,
+        # which made init non-reproducible across runs)
+        k = jax.random.fold_in(key, zlib.crc32(lyr.name.encode()) % (2 ** 31))
         if lyr.kind == "fc":
             fan_in = lyr.in_ch
             w = jax.random.normal(k, (lyr.in_ch, lyr.out_ch), jnp.float32)
@@ -56,86 +55,17 @@ def init_params(model: CNNModel, key=None, dtype=jnp.float32) -> Params:
 def forward(params: Params, model: CNNModel, x: jnp.ndarray,
             quantized: bool = False, bits: int = 8,
             use_kernel: bool = False) -> jnp.ndarray:
-    """x [B,H,W,C] float. quantized=True runs the paper's fixed-point path
-    (per-channel po2 scales, int32 accumulation) via the same graph.
-    use_kernel=True routes the int8 conv MACs through the Pallas PE-array
-    kernel (interpret mode on CPU; the real thing on TPU)."""
-    hw = x.shape[1]
-    last = [l for l in model.layers if l.kind != "pool"][-1]
-    for lyr in model.layers:
-        out_hw = lyr.out_hw(hw)
-        if lyr.kind == "pool":
-            lo, hi = _pad_for(lyr, hw, out_hw)
-            x = -jax.lax.reduce_window(
-                -x, jnp.inf, jax.lax.min,
-                (1, lyr.kernel, lyr.kernel, 1),
-                (1, lyr.stride, lyr.stride, 1),
-                ((0, 0), (lo, hi), (lo, hi), (0, 0)))
-        elif lyr.kind == "fc":
-            x = x.reshape(x.shape[0], -1)
-            w, b = params[lyr.name]["w"], params[lyr.name]["b"]
-            x = (_fc_quantized(x, w, bits) if quantized else x @ w) + b
-            if lyr is not last:
-                x = jax.nn.relu(x)
-        else:
-            w, b = params[lyr.name]["w"], params[lyr.name]["b"]
-            lo, hi = _pad_for(lyr, hw, out_hw)
-            if quantized:
-                x = _conv_quantized(x, w, lyr, (lo, hi), bits,
-                                    use_kernel=use_kernel)
-            else:
-                x = jax.lax.conv_general_dilated(
-                    x, w, (lyr.stride, lyr.stride),
-                    ((lo, hi), (lo, hi)),
-                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
-                    feature_group_count=lyr.groups)
-            x = jax.nn.relu(x + b)
-        hw = out_hw
-    return x
+    """x [B,H,W,C] float. quantized=True compiles an EngineProgram with
+    scales calibrated on ``x`` and runs the paper's fixed-point pipeline
+    (per-channel po2 weight formats, int32 accumulation, fused
+    bias/ReLU/shift epilogue, int8 activations end-to-end).
+    use_kernel=True routes the MACs through the Pallas PE-array kernel
+    (interpret mode on CPU; the real thing on TPU).
 
-
-def _conv_quantized(x, w, lyr: ConvLayer, pad, bits, use_kernel=False):
-    """Paper-style fixed point: quantize activations (per-tensor) and
-    weights (per-output-channel) to po2 scales, int MACs, 32-bit accumulate,
-    dequantize for the (float) bias+relu epilogue."""
-    xq, ex = quant.quantize_po2(x, axis=-1, bits=bits)
-    # Align per-channel formats onto the per-tensor (max) exponent before
-    # the MAC array — the left/right shifter stage of Fig. 3(c).
-    ex_t = jnp.max(ex)
-    xq = quant.requantize_output(xq.astype(jnp.int32), ex, ex_t, bits)
-    wq, ew = quant.quantize_po2(w, axis=-1, bits=bits)      # per out-channel
-    # 8-bit: exact int32 accumulation (the paper's 32-bit partial sums).
-    # 16-bit: the DSP48 accumulates in 48 bits; we simulate in fp32 (exact
-    # to ~2^-24, far below the quantization step).
-    if use_kernel and bits <= 8 and lyr.groups == 1 \
-            and pad[0] == pad[1] == lyr.kernel // 2:
-        # Pallas PE-array path: int8 implicit GEMM with shift epilogue is
-        # the engine; the epilogue shift is folded into the fp scale here
-        # (shift=0 keeps full int32 precision in this validation mode).
-        from repro.kernels.conv2d_int8.ops import conv2d_int8
-        import jax as _jax
-        interp = _jax.devices()[0].platform != "tpu"
-        acc = conv2d_int8(xq.astype(jnp.int8), wq.astype(jnp.int8),
-                          jnp.zeros((w.shape[-1],), jnp.int32),
-                          stride=lyr.stride, interpret=interp,
-                          emit_int32=True)
-        return acc.astype(jnp.float32) * jnp.exp2(
-            (ew + ex_t).astype(jnp.float32))
-    acc_dt = jnp.int32 if bits <= 8 else jnp.float32
-    acc = jax.lax.conv_general_dilated(
-        xq.astype(acc_dt), wq.astype(acc_dt),
-        (lyr.stride, lyr.stride), (pad, pad),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=lyr.groups,
-        preferred_element_type=acc_dt)
-    return acc.astype(jnp.float32) * jnp.exp2(
-        (ew + ex_t).astype(jnp.float32))
-
-
-def _fc_quantized(x, w, bits):
-    xq, ex = quant.quantize_po2(x, axis=0, bits=bits)   # per-row (batch)
-    wq, ew = quant.quantize_po2(w, axis=-1, bits=bits)
-    acc_dt = jnp.int32 if bits <= 8 else jnp.float32
-    acc = jnp.einsum("bi,io->bo", xq.astype(acc_dt), wq.astype(acc_dt))
-    return acc.astype(jnp.float32) * jnp.exp2(
-        (ex[:, None] + ew[None, :]).astype(jnp.float32))
+    Note: this wrapper recompiles (and recalibrates on ``x``) every call —
+    the seed's dynamic-scale semantics. For repeated inference, compile
+    once with ``repro.core.program.compile_model`` and reuse the program."""
+    if not quantized:
+        return float_forward(params, model, x)
+    prog = compile_model(model, params, bits=bits, calib_batch=x)
+    return prog.run(x, use_kernel=use_kernel and bits <= 8)

@@ -3,13 +3,14 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import throughput as T
 from repro.core import workload as W
-from repro.core.allocator import (LayerAlloc, _partition_min_max,
-                                  allocate_buffers, allocate_compute,
-                                  engine_cycles, plan_pipeline, total_bram)
+from repro.core.allocator import (LayerAlloc, _decompose_theta,
+                                  _partition_min_max, allocate_buffers,
+                                  allocate_compute, engine_cycles,
+                                  plan_pipeline, total_bram)
 from repro.core.workload import LayerWorkload
 
 THETA = 900
@@ -105,6 +106,24 @@ def layer_lists(draw):
     return out
 
 
+def _fixed_layer_lists():
+    """Deterministic stand-ins for the hypothesis strategy: a few hand-picked
+    CNNs hitting primes, kernel-size mixes, and tiny channel counts."""
+    def mk(i, r, c, m, h):
+        return LayerWorkload(
+            name=f"l{i}", macs=h * h * r * r * c * m,
+            weight_bytes=r * r * c * m * 2, act_in_bytes=h * h * c,
+            act_out_bytes=h * h * m, kind="conv", R=r, S=r, stride=1,
+            C=c, M=m, H=h, W=h)
+    return [
+        [mk(0, 3, 3, 64, 56), mk(1, 1, 64, 7, 56)],
+        [mk(0, 5, 17, 23, 28), mk(1, 3, 23, 64, 28), mk(2, 7, 64, 1, 14)],
+        [mk(0, 1, 1, 1, 7), mk(1, 3, 1, 2, 7), mk(2, 5, 2, 3, 7)],
+        [mk(i, [1, 3, 5, 7][i % 4], 8 * (i + 1), 8 * (8 - i), 14)
+         for i in range(8)],
+    ]
+
+
 @given(layer_lists(), st.integers(64, 2048))
 @settings(max_examples=30, deadline=None)
 def test_alg1_property(layers, theta):
@@ -115,6 +134,19 @@ def test_alg1_property(layers, theta):
         assert a.theta % (a.layer.R * a.layer.S) == 0
         assert 1 <= a.Cp <= a.layer.C
         assert 1 <= a.Mp <= a.layer.M
+
+
+@pytest.mark.parametrize("theta", [64, 311, 900, 2048])
+def test_alg1_fixed_cases(theta):
+    """Deterministic fallback for test_alg1_property."""
+    for layers in _fixed_layer_lists():
+        allocs = allocate_compute(layers, theta)
+        used = sum(a.theta for a in allocs)
+        assert used <= max(theta, sum(l.R * l.S for l in layers))
+        for a in allocs:
+            assert a.theta % (a.layer.R * a.layer.S) == 0
+            assert 1 <= a.Cp <= a.layer.C
+            assert 1 <= a.Mp <= a.layer.M
 
 
 @given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=10),
@@ -152,6 +184,22 @@ def test_plan_pipeline_basic():
     assert plan.utilization > 0.2
     assert plan.mem_per_chip < 16e9
     assert sum(plan.layers_per_stage) == len(layers)
+
+
+@pytest.mark.parametrize("cycle_model", ["packed", "ceil"])
+def test_decompose_theta_in_bounds(cycle_model):
+    """Regression: the clamp fallback must never exceed (C, M) or the PE
+    budget, including non-divisor budgets and theta_pe > C*M."""
+    for C in (1, 2, 3, 5, 8, 13, 64):
+        for M in (1, 2, 3, 7, 16, 64):
+            for t in (1, 2, 3, 5, 7, 11, 63, 64, 100, C * M, C * M + 17):
+                cp, mp = _decompose_theta(t, C, M, cycle_model=cycle_model)
+                assert 1 <= cp <= C, (C, M, t, cp, mp)
+                assert 1 <= mp <= M, (C, M, t, cp, mp)
+                assert cp * mp <= max(t, 1), (C, M, t, cp, mp)
+                if t >= C * M:
+                    # full parallelism must be reached exactly
+                    assert (cp, mp) == (C, M)
 
 
 def test_engine_cycles_monotone():
@@ -210,6 +258,37 @@ def test_workload_model_matches_real_param_counts():
         wb = sum(l.weight_bytes for l in lw) / 2
         pc = param_count(cfg)
         assert abs(wb / pc - 1) < 0.06, (name, wb / pc)
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_partition_fixed_cases(k):
+    """Deterministic fallback for test_partition_optimal."""
+    import itertools
+    weights = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0]
+    bounds, cost = _partition_min_max(weights, k)
+    assert bounds[0] == 0 and bounds[-1] == len(weights)
+    got = max(sum(weights[bounds[i]:bounds[i + 1]]) for i in range(k))
+    assert abs(got - cost) < 1e-9
+    n = len(weights)
+    best = min(max(sum(weights[bs[i]:bs[i + 1]]) for i in range(k))
+               for cuts in itertools.combinations(range(1, n), k - 1)
+               for bs in [[0, *cuts, n]])
+    assert cost <= best + 1e-9
+
+
+@pytest.mark.parametrize("bram,bandwidth", [(300, 5e8), (1090, 4.2e9)])
+def test_alg2_fixed_cases(bram, bandwidth):
+    """Deterministic fallback for test_alg2_property."""
+    for layers in _fixed_layer_lists():
+        allocs = allocate_compute(layers, 512)
+        base = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
+                   for a in allocs if a.layer.kind == "conv")
+        allocate_buffers(allocs, bram_total=bram, bandwidth_bytes=bandwidth,
+                         freq_hz=200e6)
+        after = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
+                    for a in allocs if a.layer.kind == "conv")
+        assert after <= base
+        assert all(a.K >= 1 for a in allocs)
 
 
 @given(layer_lists(), st.integers(200, 2000), st.floats(1e8, 1e10))

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.kernels.conv2d_int8 import ref as conv_ref
 from repro.kernels.conv2d_int8.ops import conv2d_int8
@@ -63,6 +63,21 @@ def test_linear_scan_vs_ref(B, S, D, chunk):
        st.booleans())
 @settings(max_examples=8, deadline=None)
 def test_flash_attention_property(B, S, H, d, causal):
+    key = jax.random.PRNGKey(B * S + H * d)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, d), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, d), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, d), jnp.float32)
+    got = attention(q, k, v, causal=causal, interpret=True)
+    want = attn_ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,d,causal", [(1, 64, 1, 32, False),
+                                            (2, 128, 2, 64, True)])
+def test_flash_attention_fixed_cases(B, S, H, d, causal):
+    """Deterministic fallback for test_flash_attention_property."""
     key = jax.random.PRNGKey(B * S + H * d)
     kq, kk, kv = jax.random.split(key, 3)
     q = jax.random.normal(kq, (B, S, H, d), jnp.float32)

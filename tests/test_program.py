@@ -1,0 +1,150 @@
+"""EngineProgram: compile-once semantics, bit-identity between the Pallas
+kernel path and the pure-jnp int oracle, and plan/execution unification."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import workload as W
+from repro.core.program import compile_model, float_forward
+from repro.core.simulator import simulate
+from repro.models import cnn
+
+
+def _compiled(name, batch=1, seed=0, bits=8):
+    m = W.CNN_MODELS[name]()
+    p = cnn.init_params(m, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (batch, m.input_hw, m.input_hw, m.input_ch))
+    return compile_model(m, p, bits=bits, calib_batch=x), p, x
+
+
+@pytest.mark.parametrize("model", ["alexnet", "vgg16"])
+def test_program_kernel_bit_identical_to_oracle(model):
+    """The Pallas PE-array path (interpret mode) and the jnp int oracle
+    execute the same frozen plan bit-for-bit — including AlexNet's
+    stride-4 stem and grouped convs, and VGG16's fc layers on the same
+    GEMM engine."""
+    prog, _, x = _compiled(model)
+    y_oracle = prog.run(x, use_kernel=False)
+    y_kernel = prog.run(x, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(y_oracle), np.asarray(y_kernel))
+
+
+def test_program_scales_frozen_at_compile():
+    """No per-forward quantize_po2: weights are int8 with a fixed shift
+    schedule, every hidden step requantizes to int8, and two runs on
+    different inputs reuse the identical frozen formats."""
+    prog, _, x = _compiled("alexnet")
+    compute = [s for s in prog.steps if s.kind != "pool"]
+    for s in compute[:-1]:
+        assert s.wq.dtype == jnp.int8
+        assert s.bias_q.dtype == jnp.int32
+        assert s.shift.dtype == jnp.int32
+        assert s.requantize and s.relu
+        # activations stay int8 end-to-end: formats chain exactly
+    assert not compute[-1].requantize and not compute[-1].relu
+    e = prog.e_input
+    for s in prog.steps:
+        if s.kind == "pool":
+            continue
+        assert s.e_in == e
+        e = s.e_out
+    y1 = prog.run(x)
+    y2 = prog.run(x * 0.5)  # different data, same frozen formats
+    assert y1.shape == y2.shape
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(prog.run(x)))
+
+
+def test_program_close_to_float_and_wrapper_equivalent():
+    """forward(quantized=True) is a thin wrapper over the program; the
+    program output tracks the float reference."""
+    prog, p, x = _compiled("alexnet", batch=2)
+    y_prog = prog.run(x)
+    y_fwd = cnn.forward(p, prog.model, x, quantized=True, bits=8)
+    np.testing.assert_array_equal(np.asarray(y_prog), np.asarray(y_fwd))
+    y_f = float_forward(p, prog.model, x)
+    rel = float(jnp.linalg.norm(y_f - y_prog) / jnp.linalg.norm(y_f))
+    assert rel < 0.15, rel
+
+
+def test_plan_only_program_drives_simulator():
+    """compile_model without params produces the shared plan: the
+    simulator and throughput model consume it; run() refuses."""
+    from repro.core import throughput as T
+    prog = compile_model(W.CNN_MODELS["vgg16"](), theta=900, bits=16)
+    assert sum(a.theta for a in prog.allocs) <= 900
+    sim = simulate(prog, n_frames=3)
+    assert 0.9 < sim.dsp_efficiency <= 1.0
+    # analytic and simulated steady state agree on the same plan
+    assert abs(sim.steady_cycles - T.frame_cycles(prog.allocs)) \
+        / T.frame_cycles(prog.allocs) < 0.02
+    with pytest.raises(ValueError):
+        prog.run(jnp.zeros((1, 224, 224, 3)))
+
+
+def test_simulator_partial_last_row_group():
+    """H % K != 0: the last row-group must be charged only its actual
+    rows — steady-state equals the throughput model's H * t_row / K."""
+    from repro.core.allocator import LayerAlloc
+    from repro.core.workload import LayerWorkload
+    l = LayerWorkload(name="c", macs=13 * 13 * 9 * 8 * 8,
+                      weight_bytes=9 * 8 * 8, act_in_bytes=0,
+                      act_out_bytes=0, kind="conv", R=3, S=3, C=8, M=8,
+                      H=13, W=13)
+    a = LayerAlloc(l, 9 * 4, 2, 2, K=5)   # 13 rows in groups of 5: 5+5+3
+    sim = simulate([a], n_frames=3)
+    want = l.H * a.t_per_output_row
+    assert abs(sim.steady_cycles - want) < 1e-6
+    assert abs(sim.frame_cycles - want) < 1e-6
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_program_model_ending_in_pool(bits):
+    """A graph whose final layer is a pool: the dequant scale must come
+    from the last *compute* step (regression for steps[-1] assumption),
+    and the pool must handle the float accumulators of the bits=16 path."""
+    m = W.CNNModel("tiny", 8, 3, (
+        W.ConvLayer("c1", 3, 4, 3),
+        W.ConvLayer("p1", 4, 4, 2, stride=2, kind="pool"),
+    ))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    prog = compile_model(m, p, bits=bits, calib_batch=x)
+    y = prog.run(x)
+    assert y.shape == (2, 4, 4, 4)
+    if bits == 8:
+        np.testing.assert_array_equal(
+            np.asarray(y), np.asarray(prog.run(x, use_kernel=True)))
+
+
+def test_dead_weight_channel_keeps_its_bias():
+    """A channel with near-zero weights but a significant bias must not
+    lose the bias to accumulator-format saturation (the weight format is
+    floored so the bias stays representable)."""
+    m = W.CNNModel("tiny", 8, 3, (
+        W.ConvLayer("c1", 3, 4, 3),
+        W.ConvLayer("c2", 4, 4, 3),
+    ))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    p["c1"]["w"] = p["c1"]["w"].at[..., 0].set(1e-9)   # dead channel 0
+    p["c1"]["b"] = p["c1"]["b"].at[0].set(8.0)         # ...with real bias
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    prog = compile_model(m, p, bits=8, calib_batch=x)
+    y = prog.run(x)
+    y_f = float_forward(p, m, x)
+    rel = float(jnp.linalg.norm(y_f - y) / jnp.linalg.norm(y_f))
+    assert rel < 0.15, rel
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(prog.run(x, use_kernel=True)))
+
+
+def test_program_int16_oracle_path():
+    prog, p, x = _compiled("zf", bits=16)
+    y = prog.run(x)
+    y_f = float_forward(p, prog.model, x)
+    rel = float(jnp.linalg.norm(y_f - y) / jnp.linalg.norm(y_f))
+    assert rel < 1e-3, rel
+    with pytest.raises(NotImplementedError):
+        prog.run(x, use_kernel=True)

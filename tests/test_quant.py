@@ -1,0 +1,115 @@
+"""Quant round-trips: the signed-shift requantizer, adder-tree alignment
+exactness, and the fused engine epilogue vs the float-epilogue reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels.conv2d_int8 import ref as cref
+from repro.kernels.conv2d_int8.kernel import gemm_int8
+
+
+def test_requantize_negative_shift_left_shifts():
+    """e_out < e_acc: the requantizer must take the left-shift branch
+    (output format finer than the accumulator's)."""
+    acc = jnp.array([[3, -5, 30]], jnp.int32)
+    out = quant.requantize_output(acc, 0, -2, bits=8)
+    np.testing.assert_array_equal(np.asarray(out)[0], [12, -20, 120])
+    # and saturate on overflow rather than wrap
+    out = quant.requantize_output(jnp.array([[100, -100]], jnp.int32),
+                                  0, -2, bits=8)
+    np.testing.assert_array_equal(np.asarray(out)[0], [127, -128])
+
+
+def test_left_shift_saturates_instead_of_wrapping():
+    """Large accumulators under a negative shift must saturate to the int8
+    rails, not wrap int32 (regression: 1<<24 << 8 wrapped to 0)."""
+    acc = jnp.array([[1 << 24, -(1 << 24), 1 << 30, -(1 << 30)]], jnp.int32)
+    sh = jnp.full((4,), -8, jnp.int32)
+    out = cref.requantize_ref(acc, sh)
+    np.testing.assert_array_equal(np.asarray(out)[0], [127, -128, 127, -128])
+    out = quant.requantize_output(acc, 0, -8, bits=8)
+    np.testing.assert_array_equal(np.asarray(out)[0], [127, -128, 127, -128])
+    # boundary: a full-width left shift must saturate positives to +127,
+    # not collapse them to 0 (regression: int32_max >> 31 == 0 preimage)
+    out = quant.requantize_output(jnp.array([[1, 5, -5, 0]], jnp.int32),
+                                  0, -31, bits=8)
+    np.testing.assert_array_equal(np.asarray(out)[0], [127, 127, -128, 0])
+    # the Pallas kernel epilogue saturates identically
+    x = jnp.full((8, 32), 127, jnp.int8)
+    w = jnp.full((32, 8), 127, jnp.int8)     # acc = 32*127*127 ~ 2^19
+    got = gemm_int8(x, w, jnp.full((8,), -13, jnp.int32), interpret=True)
+    want = cref.gemm_int8_ref(x, w, jnp.full((8,), -13, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(np.asarray(got)[0, 0]) == 127
+
+
+def test_requantize_roundtrip_identity():
+    """shift down then up by the same amount is lossless for in-range
+    multiples (the formats are po2, so this is pure bit movement)."""
+    q = jnp.arange(-32, 32, dtype=jnp.int32) * 4
+    down = quant.requantize_output(q, 0, 2, bits=8)
+    up = quant.requantize_output(down.astype(jnp.int32), 2, 0, bits=16)
+    np.testing.assert_array_equal(np.asarray(up), np.asarray(q))
+
+
+def test_align_partial_sums_exact_vs_float_oracle():
+    """Aligning per-channel psums onto the common (finest) exponent is
+    exact: q * 2^e_in == aligned * 2^e_common, verified against a float64
+    oracle."""
+    rng = np.random.default_rng(0)
+    psum = jnp.asarray(rng.integers(-2 ** 20, 2 ** 20, (16, 8)), jnp.int32)
+    e_in = jnp.asarray(rng.integers(-3, 6, (8,)), jnp.int32)
+    e_common = jnp.full((), int(jnp.min(e_in)), jnp.int32)
+    aligned = quant.align_partial_sums(psum, e_in, e_common, axis=-1)
+    want = np.asarray(psum, np.float64) * np.exp2(np.asarray(e_in))[None, :]
+    got = np.asarray(aligned, np.float64) * np.exp2(float(e_common))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_fused_epilogue_bit_exact_vs_float_epilogue(relu):
+    """The fused int epilogue (bias+ReLU+shift inside the kernel) must be
+    bit-exact against the float-epilogue path the seed model used — acc ->
+    float32 dequant -> float bias/ReLU -> truncate onto the output format —
+    when the float path applies the same floor semantics."""
+    key = jax.random.PRNGKey(5)
+    kx, kw, kb = jax.random.split(key, 3)
+    N, K, M = 96, 64, 40
+    x = jax.random.randint(kx, (N, K), -128, 127, jnp.int8)
+    w = jax.random.randint(kw, (K, M), -30, 30, jnp.int8)
+    bias = jax.random.randint(kb, (M,), -4096, 4096, jnp.int32)
+    shift = jnp.asarray(np.tile([7, 5, 0, -1, 3], M // 5), jnp.int32)
+
+    got = gemm_int8(x, w, shift, bias, relu=relu, interpret=True)
+
+    # float64-epilogue oracle: exact for these magnitudes (< 2^53)
+    acc = np.asarray(x, np.int64) @ np.asarray(w, np.int64) \
+        + np.asarray(bias, np.int64)[None, :]
+    y = np.maximum(acc, 0) if relu else acc
+    y = np.floor(y.astype(np.float64) * np.exp2(-np.asarray(shift))[None, :])
+    want = np.clip(y, -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # and the ref oracle is the same function
+    ref = cref.gemm_int8_ref(x, w, shift, bias, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_fused_epilogue_within_one_lsb_of_round_to_nearest():
+    """vs the seed's round-to-nearest float requantize, truncation differs
+    by at most one LSB of the output format (the paper's stated cost of
+    'right shifted and truncated')."""
+    key = jax.random.PRNGKey(9)
+    kx, kw = jax.random.split(key)
+    N, K, M = 64, 32, 16
+    x = jax.random.randint(kx, (N, K), -128, 127, jnp.int8)
+    w = jax.random.randint(kw, (K, M), -30, 30, jnp.int8)
+    shift = jnp.full((M,), 6, jnp.int32)
+    got = np.asarray(gemm_int8(x, w, shift, relu=False, interpret=True),
+                     np.int32)
+    acc = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+    seed_style = np.clip(np.round(acc.astype(np.float64) / 2.0 ** 6),
+                         -128, 127).astype(np.int32)
+    assert np.max(np.abs(got - seed_style)) <= 1

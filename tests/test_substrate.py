@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro import checkpointing as ckpt
 from repro import optim
@@ -105,6 +105,17 @@ def test_clip_by_global_norm():
 @given(st.integers(0, 4), st.sampled_from([8, 16]))
 @settings(max_examples=20, deadline=None)
 def test_po2_quant_roundtrip(seed, bits):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 16)) * 10
+    q, e = quant.quantize_po2(x, axis=-1, bits=bits)
+    deq = quant.dequantize_po2(q, e, axis=-1)
+    rel = float(jnp.linalg.norm(deq - x) / jnp.linalg.norm(x))
+    assert rel < (0.02 if bits == 8 else 1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_po2_quant_roundtrip_fixed(seed, bits):
+    """Deterministic fallback for test_po2_quant_roundtrip."""
     x = jax.random.normal(jax.random.PRNGKey(seed), (32, 16)) * 10
     q, e = quant.quantize_po2(x, axis=-1, bits=bits)
     deq = quant.dequantize_po2(q, e, axis=-1)
