@@ -12,3 +12,14 @@ test-fast:
 .PHONY: bench
 bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py all
+
+# Exactly what the CI bench-smoke job runs (AlexNet-only, small batch).
+.PHONY: bench-quick
+bench-quick:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_bench.py --quick --out BENCH_serve.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve.json
+
+.PHONY: lint
+lint:
+	ruff check src tests benchmarks examples

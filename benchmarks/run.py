@@ -1,20 +1,23 @@
 """Benchmark harness — one module per paper table/figure.
 
   table1    : paper Table I (4 CNNs on ZC706-class budget) + baselines
+  serve     : measured-vs-modeled serving FPS (jitted batched executor
+              vs eager loop vs Algorithm 1) -> BENCH_serve.json
   ablation  : allocator objectives (paper greedy / exact / waterfill)
-  stage     : pipeline stage balance on the TPU mesh (flexibility claim)
+              + pipeline stage balance on the TPU mesh
   roofline  : three-term roofline per (arch x shape x mesh) cell
   kernels   : Pallas kernel microbenches (interpret-mode correctness +
               wall time of the jnp oracle path on CPU)
 
-Prints ``name,us_per_call,derived`` CSV lines (one per measurement) plus
-human-readable tables.
+Usage: ``python benchmarks/run.py [which] [--quick]`` where ``which`` is
+one of the names above or ``all``. ``--quick`` runs the reduced CI
+setting (AlexNet-only table1/serve). Prints ``name,us_per_call,derived``
+CSV lines (one per measurement) plus human-readable tables.
 """
 
 from __future__ import annotations
 
-import sys
-import time
+import argparse
 
 _CSV: list[str] = []
 
@@ -24,12 +27,31 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     _CSV.append(line)
 
 
-def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else "all"
+def print_csv(lines: list[str]) -> None:
+    """The shared trailing CSV block every benchmark entry point prints
+    (one format, one place — table1.main and serve_bench.main reuse it)."""
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("which", nargs="?", default="all",
+                    choices=("all", "table1", "serve", "ablation",
+                             "roofline", "kernels"))
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced CI setting (AlexNet-only, small batch)")
+    args = ap.parse_args(argv)
+    only = args.which
 
     if only in ("all", "table1"):
         from benchmarks import table1
-        table1.run(emit)
+        table1.run(emit, quick=args.quick)
+    if only in ("all", "serve"):
+        from benchmarks import serve_bench
+        serve_bench.run(emit, quick=args.quick)
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run_objectives(emit)
@@ -42,11 +64,9 @@ def main() -> None:
         from benchmarks import kernel_bench
         kernel_bench.run(emit)
 
-    print("\n== CSV ==")
-    print("name,us_per_call,derived")
-    for line in _CSV:
-        print(line)
+    print_csv(_CSV)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

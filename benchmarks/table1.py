@@ -8,6 +8,7 @@ arithmetic come from one plan."""
 
 from __future__ import annotations
 
+import functools
 import time
 
 from benchmarks.baselines import (dnnbuilder_allocate, recurrent_efficiency,
@@ -23,6 +24,9 @@ PAPER = {  # model: (DSP, eff, fps16, gops16, fps8, gops8)
     "zf": (892, 0.908, 138.4, 324, 276.8, 648),
     "yolo": (892, 0.984, 8.8, 351, 17.5, 702),
 }
+PAPER_GOP = {  # model complexity the paper quotes (GOP, 2 ops/MAC)
+    "vgg16": 30.94, "alexnet": 1.45, "zf": 2.34, "yolo": 40.14,
+}
 PAPER_BASELINES_VGG = {  # reference: (DSP, eff, gops16)
     "[1] recurrent": (780, 0.585, 137),
     "[2] fused": (824, 0.696, 230),
@@ -33,37 +37,56 @@ FREQ = 200e6
 THETA = 900
 
 
-def run(emit):
+@functools.lru_cache(maxsize=None)
+def modeled_row(model: str) -> dict:
+    """The analytic Table-I columns for one model, from plan-only compiles
+    of the same :class:`EngineProgram` the executor runs — the "modeled"
+    side that ``benchmarks/serve_bench.py`` records next to measured FPS.
+    Cached: ``run.py all`` consumes it from both table1 and serve_bench."""
+    m = W.CNN_MODELS[model]()
+    # ---- 16-bit: 1 multiplier per DSP (plan-only compile: Alg. 1 + 2)
+    t0 = time.time()
+    p16 = compile_model(m, theta=THETA, bits=16, bram_total=545,
+                        bandwidth_bytes=4.2e9, freq_hz=FREQ)
+    alloc_us = (time.time() - t0) * 1e6
+    a16 = p16.allocs
+    # ---- 8-bit: 2 multipliers per DSP (paper's efficiency regime);
+    # compute allocation only, as in Table I's efficiency columns.
+    p8 = compile_model(m, theta=2 * THETA - len(m.layers), bits=8,
+                       bram_total=None, freq_hz=FREQ)
+    a8 = p8.allocs
+    # ---- simulator cross-check on the same program object
+    sim = simulate(p16, n_frames=3)
+    return {
+        "gop": m.gop,
+        "alloc_us": alloc_us,
+        "dsp16": T.dsps_used(a16),
+        "eff16": T.dsp_efficiency(a16),
+        "fps16": p16.fps(),
+        "gops16": T.gops(a16, freq_hz=FREQ),
+        "dsp8": T.dsps_used(a8, macs_per_dsp=2),
+        "eff8": T.dsp_efficiency(a8, macs_per_dsp=2),
+        "fps8": p8.fps(),
+        "gops8": T.gops(a8, freq_hz=FREQ),
+        "sim_eff": sim.dsp_efficiency,
+    }
+
+
+def run(emit, models: list[str] | None = None, quick: bool = False):
+    """Print the Table-I reproduction. ``quick`` restricts to AlexNet and
+    skips the VGG16 baseline / BRAM sections (the CI smoke setting)."""
+    if models is None:
+        models = ["alexnet"] if quick else list(W.CNN_MODELS)
     rows = []
-    for model, fn in W.CNN_MODELS.items():
-        m = fn()
-        gop = m.gop
-        # ---- 16-bit: 1 multiplier per DSP (plan-only compile: Alg. 1 + 2)
-        t0 = time.time()
-        p16 = compile_model(m, theta=THETA, bits=16, bram_total=545,
-                            bandwidth_bytes=4.2e9, freq_hz=FREQ)
-        alloc_us = (time.time() - t0) * 1e6
-        a16 = p16.allocs
-        dsp16 = T.dsps_used(a16)
-        eff16 = T.dsp_efficiency(a16)
-        fps16 = p16.fps()
-        gops16 = T.gops(a16, freq_hz=FREQ)
-        # ---- 8-bit: 2 multipliers per DSP (paper's efficiency regime);
-        # compute allocation only, as in Table I's efficiency columns.
-        p8 = compile_model(m, theta=2 * THETA - len(m.layers), bits=8,
-                           bram_total=None, freq_hz=FREQ)
-        a8 = p8.allocs
-        dsp8 = T.dsps_used(a8, macs_per_dsp=2)
-        eff8 = T.dsp_efficiency(a8, macs_per_dsp=2)
-        fps8 = p8.fps()
-        gops8 = T.gops(a8, freq_hz=FREQ)
-        # ---- simulator cross-check on the same program object
-        sim = simulate(p16, n_frames=3)
+    for model in models:
+        r = modeled_row(model)
         p = PAPER[model]
-        emit(f"table1/{model}/alloc", alloc_us,
-             f"gop={gop:.2f}|paper_gop_ok={abs(gop-p16.gop)<1e-6}")
-        rows.append((model, dsp16, eff16, fps16, gops16, dsp8, eff8, fps8,
-                     gops8, sim.dsp_efficiency, p))
+        gop_ok = abs(r["gop"] - PAPER_GOP[model]) / PAPER_GOP[model] < 0.02
+        emit(f"table1/{model}/alloc", r["alloc_us"],
+             f"gop={r['gop']:.2f}|paper_gop_ok={gop_ok}")
+        rows.append((model, r["dsp16"], r["eff16"], r["fps16"], r["gops16"],
+                     r["dsp8"], r["eff8"], r["fps8"], r["gops8"],
+                     r["sim_eff"], p))
     print("\n== Table I reproduction (This Work columns) ==")
     print(f"{'model':9s} {'DSP':>4s} {'eff16':>6s} {'fps16':>7s} "
           f"{'gops16':>7s} {'eff8':>6s} {'fps8':>7s} {'gops8':>7s} "
@@ -74,6 +97,8 @@ def run(emit):
               f"{gops16:7.0f} {eff8:6.3f} {fps8:7.1f} {gops8:7.0f} "
               f"{sim_eff:7.3f} | {p[0]:4d} {p[1]:.3f} {p[2]:6.1f} "
               f"{p[3]:4d} {p[4]:6.1f} {p[5]:4d}")
+    if quick:
+        return rows
 
     # ---- baselines on VGG16 (the paper's headline comparison)
     l16 = W.vgg16().layer_workloads(weight_bits=16)
@@ -123,3 +148,26 @@ def run(emit):
         emit(f"table1/{model}/bram", 0.0,
              f"{bram18}of1090|paper={paper_bram[model]}")
     return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description="Table I reproduction")
+    ap.add_argument("--quick", action="store_true",
+                    help="AlexNet only, no baseline/BRAM sections (CI)")
+    ap.add_argument("--model", action="append", default=None,
+                    choices=sorted(W.CNN_MODELS), dest="models")
+    args = ap.parse_args(argv)
+    from benchmarks.run import print_csv
+    csv: list[str] = []
+
+    def emit(name, us, derived=""):
+        csv.append(f"{name},{us:.1f},{derived}")
+
+    run(emit, models=args.models, quick=args.quick)
+    print_csv(csv)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,64 @@
+"""Validate a BENCH_serve.json artifact (CI bench-smoke gate).
+
+Exits non-zero when the file is missing, is not valid JSON, records no
+models, or any model row lacks a positive measured/modeled FPS — so a
+benchmark run that silently produced garbage cannot upload a green
+artifact.
+
+  python benchmarks/validate_bench.py BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_MODEL_KEYS = ("measured_steady_fps", "eager_fps",
+                       "speedup_vs_eager", "modeled_fps_alg1", "batch",
+                       "frames", "route")
+
+
+def validate(path: str) -> list[str]:
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return [f"{path}: file not found"]
+    except json.JSONDecodeError as e:
+        return [f"{path}: malformed JSON: {e}"]
+    if not isinstance(data, dict):
+        return [f"{path}: top level is {type(data).__name__}, not object"]
+    if data.get("schema_version") != 1:
+        errors.append(f"schema_version={data.get('schema_version')!r} != 1")
+    models = data.get("models")
+    if not isinstance(models, dict) or not models:
+        errors.append("empty or missing 'models'")
+        return errors
+    for name, row in models.items():
+        for key in REQUIRED_MODEL_KEYS:
+            if key not in row:
+                errors.append(f"models.{name}: missing {key}")
+        for key in ("measured_steady_fps", "eager_fps", "modeled_fps_alg1"):
+            v = row.get(key)
+            if not isinstance(v, (int, float)) or not v > 0:
+                errors.append(f"models.{name}.{key}={v!r} not > 0")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = argv[0] if argv else "BENCH_serve.json"
+    errors = validate(path)
+    if errors:
+        for e in errors:
+            print(f"[validate_bench] FAIL: {e}", file=sys.stderr)
+        return 1
+    with open(path) as f:
+        n = len(json.load(f)["models"])
+    print(f"[validate_bench] OK: {path} ({n} model(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

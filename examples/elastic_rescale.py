@@ -16,7 +16,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
 from repro import checkpointing as ckpt
 from repro import optim

@@ -25,13 +25,19 @@ The paper's central object is a *balanced plan*: per-layer workloads
 (``use_kernel=True``; interpret mode on CPU) or through a pure-jnp integer
 oracle — the two are bit-identical, which is what ``tests/test_program.py``
 pins down.
+
+For serving, :meth:`EngineProgram.compile_runner` lowers the *whole* step
+chain into one ``jax.jit``-compiled function (weights, bias and shift
+schedules captured as constants, the int8 activation buffer donated), so a
+stream of frames runs as a single fused device program instead of the
+eager per-step loop — the software analogue of switching the paper's
+engines from frame-at-a-time operation to the steady-state pipeline.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -154,20 +160,26 @@ class EngineProgram:
 
     # -- execution ----------------------------------------------------------
 
+    def out_scale(self) -> np.ndarray:
+        """Per-channel float32 po2 scale of the final engine's int32
+        accumulators (logits = acc * out_scale, exactly)."""
+        last = [s for s in self.steps if s.kind != "pool"][-1]
+        return np.exp2(np.asarray(last.e_in + last.e_w, np.float32))
+
     def run(self, x: jnp.ndarray, *, use_kernel: bool = False,
             interpret: bool | None = None) -> jnp.ndarray:
-        """Fixed-point forward. ``x`` is float NHWC; returns float logits
-        (the final engine's 32-bit accumulators on their exact po2 scale).
-        All intermediate activations are int8 (int16 for bits=16)."""
+        """Fixed-point forward, eagerly step by step. ``x`` is float NHWC;
+        returns float logits (the final engine's 32-bit accumulators on
+        their exact po2 scale). All intermediate activations are int8
+        (int16 for bits=16). This is the per-sample reference path; for
+        throughput use :meth:`compile_runner`."""
         if self.steps is None:
             raise ValueError(
                 "plan-only program (compiled without params) cannot run")
         if interpret is None:
             interpret = jax.devices()[0].platform != "tpu"
-        if use_kernel and self.bits > 8:
-            raise NotImplementedError(
-                "the Pallas PE-array kernel is int8; bits=16 runs the "
-                "jnp oracle (48-bit DSP accumulation model)")
+        if use_kernel:
+            require_kernel(self.bits)
         xq = quant.quantize_to_exponent(x, self.e_input, self.bits)
         for step in self.steps:
             if step.kind == "pool":
@@ -176,10 +188,155 @@ class EngineProgram:
                 xq = _step_kernel(xq, step, interpret)
             else:
                 xq = _step_oracle(xq, step, self.bits)
-        last = [s for s in self.steps if s.kind != "pool"][-1]
-        scale = jnp.exp2(jnp.asarray(last.e_in + last.e_w, jnp.float32))
+        scale = jnp.asarray(self.out_scale())
         return xq.astype(jnp.float32) \
             * scale.reshape((1,) * (xq.ndim - 1) + (-1,))
+
+    def compile_runner(self, *, route: str | None = None,
+                       interpret: bool | None = None,
+                       donate: bool | None = None) -> "CompiledRunner":
+        """Lower the whole step chain into ONE jitted function over a batch
+        of already-quantized frames and wrap it as a :class:`CompiledRunner`.
+
+        ``route`` selects the MAC lowering (every route computes the exact
+        same integers — pinned by ``tests/test_executor.py``):
+
+        * ``"f32"`` (default for bits=8) — the int8 MACs run as chunked
+          float32 convolutions/GEMMs: each partial sum accumulates at most
+          1024 products of magnitude <= 2^14, so every intermediate is an
+          integer <= 2^24 and float32 arithmetic is *bit-exact*. This hits
+          the backend's fast f32 conv/GEMM paths (XLA CPU has no fast
+          integer conv), ~10x over the int32 oracle on CPU.
+        * ``"oracle"`` — the pure-jnp int32 oracle (default for bits=16,
+          whose 48-bit accumulator model is already float).
+        * ``"kernel"`` — the Pallas PE-array kernel (interpret mode off
+          TPU). Availability is checked here, once, not per step.
+
+        ``donate`` donates the int8 activation buffer to the call so XLA
+        reuses it for intermediates instead of round-tripping fresh
+        allocations (defaults to True off-CPU; CPU ignores donation).
+        """
+        if self.steps is None:
+            raise ValueError(
+                "plan-only program (compiled without params) cannot run")
+        if route is None:
+            route = "oracle" if self.bits > 8 else "f32"
+        if route not in ("f32", "oracle", "kernel"):
+            raise ValueError(f"unknown route {route!r}")
+        if route == "kernel":
+            require_kernel(self.bits)
+        if route == "f32" and self.bits > 8:
+            raise NotImplementedError(
+                "the exact-f32 route holds only for int8 products "
+                "(<= 2^14 per MAC); bits=16 uses route='oracle'")
+        if route == "f32":
+            # The exactness proof chunks the reduction over channels; a
+            # single (r, s) tap plane is its floor. Kernels wider than
+            # 32x32 (none in the paper's models) would overflow 2^24
+            # within one chunk — refuse rather than silently lose bits.
+            for s in self.steps:
+                if s.kind == "conv" and \
+                        s.layer.kernel ** 2 > _F32_CHUNK_MACS:
+                    raise NotImplementedError(
+                        f"step {s.name}: {s.layer.kernel}x"
+                        f"{s.layer.kernel} kernel exceeds the exact-f32 "
+                        f"chunk bound ({_F32_CHUNK_MACS} MACs); use "
+                        f"route='oracle'")
+        if interpret is None:
+            interpret = jax.devices()[0].platform != "tpu"
+        if donate is None:
+            donate = jax.devices()[0].platform != "cpu"
+        steps = tuple(self.steps)
+        bits = self.bits
+
+        def chain(xq: jnp.ndarray) -> jnp.ndarray:
+            for step in steps:
+                if step.kind == "pool":
+                    xq = _pool_int(xq, step)
+                elif route == "kernel":
+                    xq = _step_kernel(xq, step, interpret)
+                elif route == "f32":
+                    xq = _step_exact_f32(xq, step)
+                else:
+                    xq = _step_oracle(xq, step, bits)
+            return xq
+
+        fn = jax.jit(chain, donate_argnums=(0,) if donate else ())
+        return CompiledRunner(program=self, route=route, donate=donate,
+                              fn=fn)
+
+
+@dataclasses.dataclass
+class CompiledRunner:
+    """One jitted device program for the whole engine chain.
+
+    ``fn`` maps an int8 (int16 for bits=16) activation batch
+    ``[B, H, W, C]`` straight to the final engine's raw accumulators —
+    weights/bias/shift schedules are captured constants, so a fixed batch
+    shape compiles exactly once (``cache_size`` is the recompile guard the
+    tests pin). Host-side quantize-in and argmax/dequant-out live here so
+    the executor can overlap them with device compute.
+    """
+
+    program: EngineProgram
+    route: str
+    donate: bool
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        """Host-side quantize onto the program's frozen input format
+        (numpy twin of ``quant.quantize_to_exponent`` — bit-identical)."""
+        return quant.quantize_to_exponent_np(
+            x, self.program.e_input, self.program.bits)
+
+    def __call__(self, xq) -> jnp.ndarray:
+        """Dispatch one quantized batch; returns the device future of the
+        final accumulators (async — block or fetch to synchronize)."""
+        return self.fn(jnp.asarray(xq))
+
+    def dequantize(self, acc) -> np.ndarray:
+        """Raw final accumulators -> float32 logits on their exact po2
+        scale (host side)."""
+        acc = np.asarray(acc)
+        scale = self.program.out_scale()
+        return acc.astype(np.float32) * scale.reshape(
+            (1,) * (acc.ndim - 1) + (-1,))
+
+    def logits(self, x) -> np.ndarray:
+        """Blocking convenience: float frames -> float logits. Bit-identical
+        to ``program.run`` on the same route's arithmetic."""
+        return self.dequantize(self(self.quantize(np.asarray(x))))
+
+    def classify(self, x) -> np.ndarray:
+        """Blocking convenience: float frames -> int class ids."""
+        out = self.logits(x)
+        return np.argmax(out.reshape(out.shape[0], -1), axis=-1)
+
+    def cache_size(self) -> int:
+        """Number of distinct XLA executables behind ``fn`` (recompile
+        guard: one batch shape must stay at 1)."""
+        return self.fn._cache_size()
+
+
+def kernel_available(bits: int = 8) -> tuple[bool, str]:
+    """Probe the Pallas kernel route once: importable and applicable."""
+    if bits > 8:
+        return False, ("the Pallas PE-array kernel is int8; bits=16 runs "
+                       "the jnp oracle (48-bit DSP accumulation model)")
+    try:
+        from repro.kernels.conv2d_int8 import ops  # noqa: F401
+    except Exception as e:  # pragma: no cover - depends on install
+        return False, f"Pallas conv2d_int8 kernel unavailable: {e!r}"
+    return True, ""
+
+
+def require_kernel(bits: int = 8) -> None:
+    """Raise up front (at compile/jit time, not per step) when the kernel
+    route is requested but cannot run — a CI run asking for the kernel
+    must not silently green-light the oracle."""
+    ok, why = kernel_available(bits)
+    if not ok:
+        raise NotImplementedError(why)
 
 
 # ---------------------------------------------------------------------------
@@ -236,23 +393,82 @@ def _step_oracle(xq: jnp.ndarray, step: EngineStep, bits: int) -> jnp.ndarray:
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
             feature_group_count=lyr.groups,
             preferred_element_type=acc_dt)
-    if exact and step.requantize:
+    if exact:
         # Same fused epilogue as the kernel, from the shared oracle.
-        from repro.kernels.conv2d_int8.ref import requantize_ref
-        flat = requantize_ref(acc.reshape(-1, acc.shape[-1]), step.shift,
-                              step.bias_q, step.relu)
-        return flat.reshape(acc.shape)
+        return _epilogue_int32(acc, step)
     bias = step.bias_q.astype(acc_dt)
     acc = acc + bias.reshape((1,) * (acc.ndim - 1) + (-1,))
     if step.relu:
         acc = jnp.maximum(acc, 0)
     if not step.requantize:
         return acc
-    # bits=16: floor(acc / 2^sh) — the shifter's truncation in float.
+    # bits=16 only from here: floor(acc / 2^sh) — shifter truncation in float.
     sh = step.shift.reshape((1,) * (acc.ndim - 1) + (-1,))
     y = jnp.floor(acc * jnp.exp2(-sh.astype(jnp.float32)))
     qmax = 2 ** (bits - 1) - 1
     return jnp.clip(y, -qmax - 1, qmax).astype(jnp.int16)
+
+
+# Max MAC terms per float32 partial sum on the exact-f32 route: every
+# int8*int8 product has |p| <= 2^14, and float32 represents all integers
+# up to 2^24 exactly, so chains of <= 2^24 / 2^14 = 1024 products (and any
+# partial reordering XLA picks) stay bit-exact.
+_F32_CHUNK_MACS = 1024
+
+
+def _step_exact_f32(xq: jnp.ndarray, step: EngineStep) -> jnp.ndarray:
+    """int8 conv/fc via *exact* float32 arithmetic: the reduction dim is
+    chunked so no partial sum can exceed 2^24, chunk results are summed in
+    int32, and the identical fused epilogue requantizes. Bit-identical to
+    the int32 oracle and the Pallas kernel, but it reaches the backend's
+    fast f32 conv/GEMM code paths (XLA CPU lowers integer convs to slow
+    generic loops)."""
+    lyr = step.layer
+    wq = step.wq
+    if step.kind == "fc":
+        x2 = xq.reshape(xq.shape[0], -1).astype(jnp.float32)
+        wf = wq.astype(jnp.float32)
+        acc = jnp.zeros((x2.shape[0], wq.shape[-1]), jnp.int32)
+        for k0 in range(0, x2.shape[1], _F32_CHUNK_MACS):
+            part = x2[:, k0:k0 + _F32_CHUNK_MACS] \
+                @ wf[k0:k0 + _F32_CHUNK_MACS]
+            acc = acc + part.astype(jnp.int32)
+    else:
+        R, S, Cg, M = wq.shape
+        xf = xq.astype(jnp.float32)
+        wf = wq.astype(jnp.float32)
+        lo, hi = step.pad
+        groups = lyr.groups
+        c_chunk = max(1, _F32_CHUNK_MACS // (R * S))
+        acc = None
+        for c0 in range(0, Cg, c_chunk):
+            cc = min(c_chunk, Cg - c0)
+            if groups == 1:
+                xs = xf[..., c0:c0 + cc]
+            else:
+                xs = jnp.concatenate(
+                    [xf[..., g * Cg + c0:g * Cg + c0 + cc]
+                     for g in range(groups)], axis=-1)
+            part = jax.lax.conv_general_dilated(
+                xs, wf[:, :, c0:c0 + cc, :],
+                (lyr.stride, lyr.stride), ((lo, hi), (lo, hi)),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=groups).astype(jnp.int32)
+            acc = part if acc is None else acc + part
+    return _epilogue_int32(acc, step)
+
+
+def _epilogue_int32(acc: jnp.ndarray, step: EngineStep) -> jnp.ndarray:
+    """The shared fused output stage on exact int32 accumulators."""
+    if step.requantize:
+        from repro.kernels.conv2d_int8.ref import requantize_ref
+        flat = requantize_ref(acc.reshape(-1, acc.shape[-1]), step.shift,
+                              step.bias_q, step.relu)
+        return flat.reshape(acc.shape)
+    acc = acc + step.bias_q.reshape((1,) * (acc.ndim - 1) + (-1,))
+    if step.relu:
+        acc = jnp.maximum(acc, 0)
+    return acc
 
 
 # ---------------------------------------------------------------------------

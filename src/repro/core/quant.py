@@ -45,6 +45,19 @@ def quantize_to_exponent(x: jnp.ndarray, e: int, bits: int = 8):
     return q.astype(jnp.int8 if bits <= 8 else jnp.int16)
 
 
+def quantize_to_exponent_np(x, e: int, bits: int = 8):
+    """Numpy twin of :func:`quantize_to_exponent` for host-side
+    quantize-in (the serving executor overlaps it with device compute).
+    Bit-identical: same float32 multiply, same round-half-to-even, same
+    clip (``tests/test_executor.py::test_quantize_np_twin_bit_identical``
+    pins the equivalence)."""
+    import numpy as np
+    qmax = 2 ** (bits - 1) - 1
+    q = np.clip(np.rint(np.asarray(x, np.float32) * np.float32(2.0 ** (-e))),
+                -qmax - 1, qmax)
+    return q.astype(np.int8 if bits <= 8 else np.int16)
+
+
 def quantize_po2(x: jnp.ndarray, axis: int, bits: int = 8):
     """-> (q int8/int16, e int32 per-channel): x ~= q * 2^e."""
     e = po2_scale(x, axis, bits)

@@ -63,8 +63,7 @@ def simulate(allocs: Sequence[LayerAlloc], n_frames: int = 2) -> SimResult:
                 # Input dependency: which producer group covers the rows this
                 # group's receptive field needs?
                 if i == 0:
-                    dep = f * 1  # frame f input fully available at cycle ~0
-                    t_dep = 0.0
+                    t_dep = 0.0  # frame f input fully available at cycle ~0
                 else:
                     p = engines[i - 1]
                     pl = p.layer

@@ -22,7 +22,6 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Literal, Sequence
 
 # ---------------------------------------------------------------------------

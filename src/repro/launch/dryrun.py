@@ -18,7 +18,6 @@ Usage:
 
 import argparse
 import json
-import re
 import sys
 import time
 

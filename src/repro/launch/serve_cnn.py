@@ -1,0 +1,123 @@
+"""CNN serving launcher: stream frames through a compiled EngineProgram.
+
+Serves any of the four paper models (vgg16 / alexnet / zf / yolo) from a
+single jitted step chain via :class:`repro.core.executor.EngineExecutor`
+and reports measured steady-state FPS next to the Algorithm-1 predicted
+FPS of the same plan (the paper's modeled pipeline throughput on the
+ZC706-class budget).
+
+Example (CPU):
+  PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
+      --frames 64 --batch 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import workload as W
+from repro.core.executor import EngineExecutor
+from repro.core.program import compile_model
+from repro.models import cnn
+
+
+def serve(model_name: str, *, frames: int = 64, batch: int = 16,
+          bits: int = 8, route: str | None = None, seed: int = 0,
+          theta: int | None = None, eager_frames: int = 0,
+          output: str = "top1", verbose: bool = True) -> dict:
+    """Compile ``model_name``, serve ``frames`` synthetic frames, return a
+    result dict (measured/modeled FPS). ``eager_frames > 0`` also times
+    the eager per-sample reference loop for comparison."""
+    m = W.CNN_MODELS[model_name]()
+    params = cnn.init_params(m, jax.random.PRNGKey(seed))
+    calib = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (1, m.input_hw, m.input_hw,
+                                       m.input_ch))
+    # The plan only affects the modeled numbers, never the executed
+    # arithmetic — use Table I's budget convention for the bit width
+    # (8-bit double-pumps the 900 DSPs) so modeled_fps_alg1 here equals
+    # the fps8/fps16 column in benchmarks/table1.py.
+    if theta is None:
+        theta = 2 * 900 - len(m.layers) if bits == 8 else 900
+    kwargs = {"theta": theta,
+              "bram_total": None if bits == 8 else 545}
+    prog = compile_model(m, params, bits=bits, calib_batch=calib, **kwargs)
+
+    rng = np.random.default_rng(seed + 2)
+    stream = rng.standard_normal(
+        (frames, m.input_hw, m.input_hw, m.input_ch), dtype=np.float32)
+
+    ex = EngineExecutor(prog, batch_size=batch, route=route, output=output)
+    outs = ex.serve(stream)
+    st = ex.stats
+
+    result = {
+        "model": model_name,
+        "bits": bits,
+        "route": ex.runner.route,
+        "batch": batch,
+        "frames": st.frames,
+        "batches": st.batches,
+        "padded_frames": st.padded_frames,
+        "compile_plus_first_batch_s": round(st.first_batch_s, 3),
+        "measured_steady_fps": round(st.steady_fps, 3),
+        "modeled_fps_alg1": round(prog.fps(), 3),
+        "recompiles": ex.runner.cache_size(),
+        "sample_top1": [int(np.asarray(o).reshape(-1).argmax())
+                        if output == "logits" else int(o)
+                        for o in outs[:4]],
+    }
+    if eager_frames > 0:
+        y = prog.run(stream[:1])           # warm the eager op caches
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        for i in range(eager_frames):
+            jax.block_until_ready(prog.run(stream[i:i + 1]))
+        dt = time.perf_counter() - t0
+        result["eager_fps"] = round(eager_frames / dt, 3)
+        result["speedup_vs_eager"] = round(
+            result["measured_steady_fps"] / max(result["eager_fps"], 1e-9), 2)
+    if verbose:
+        hw_fps = result["modeled_fps_alg1"]
+        print(f"[serve_cnn] {model_name} bits={bits} route={result['route']}"
+              f" batch={batch}: measured {result['measured_steady_fps']:.2f}"
+              f" fps (steady), modeled {hw_fps:.1f} fps (Alg. 1 @200MHz)"
+              f" | first batch {st.first_batch_s:.1f}s"
+              f" | recompiles={result['recompiles']}")
+        if "eager_fps" in result:
+            print(f"[serve_cnn]   eager per-sample {result['eager_fps']:.2f}"
+                  f" fps -> {result['speedup_vs_eager']:.1f}x batched")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="alexnet",
+                    choices=sorted(W.CNN_MODELS))
+    ap.add_argument("--frames", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--bits", type=int, default=8, choices=(8, 16))
+    ap.add_argument("--route", default=None,
+                    choices=("f32", "oracle", "kernel"),
+                    help="MAC lowering (default: f32 for int8)")
+    ap.add_argument("--eager-frames", type=int, default=0,
+                    help="also time N frames through the eager loop")
+    ap.add_argument("--output", default="top1",
+                    choices=("top1", "logits"))
+    ap.add_argument("--quick", action="store_true",
+                    help="small smoke setting (8 frames, batch 4)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.frames, args.batch = 8, 4
+    serve(args.model, frames=args.frames, batch=args.batch, bits=args.bits,
+          route=args.route, eager_frames=args.eager_frames,
+          output=args.output)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,8 +4,6 @@ dryrun.py."""
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

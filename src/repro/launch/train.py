@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro import optim
 from repro.configs import get as get_arch

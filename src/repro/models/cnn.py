@@ -68,4 +68,6 @@ def forward(params: Params, model: CNNModel, x: jnp.ndarray,
     if not quantized:
         return float_forward(params, model, x)
     prog = compile_model(model, params, bits=bits, calib_batch=x)
-    return prog.run(x, use_kernel=use_kernel and bits <= 8)
+    # No silent fallback: run() raises up front if the kernel route is
+    # requested but unavailable (bits=16 / Pallas missing).
+    return prog.run(x, use_kernel=use_kernel)

@@ -11,13 +11,11 @@ that run the `long_500k` shape.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import (Params, apply_dense, dense, rms_norm,
-                                 rms_norm_init)
+from repro.models.layers import Params, apply_dense, dense
 
 # ---------------------------------------------------------------------------
 # RG-LRU (Griffin, arXiv:2402.19427, Section 2.4)

@@ -9,7 +9,6 @@ bitsandbytes-style formulation.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

@@ -1,0 +1,75 @@
+"""Regenerate the golden int8-program outputs checked into tests/golden/.
+
+  PYTHONPATH=src python tests/golden/generate.py [model ...]
+
+One ``<model>.npz`` per model, produced by the jitted batched runner
+(route="f32" — bit-identical to the int32 oracle and the Pallas kernel)
+on deterministic params/frames (``cnn.init_params`` uses a crc32 layer
+fold, so the draw reproduces exactly across runs and machines). Stored:
+
+  acc_sample  first 32 raw int32 accumulators of frame 0
+  acc_crc     crc32 of the full int32 accumulator buffer (both frames)
+  top1        per-frame argmax class ids
+  e_input     frozen input exponent
+  e_out       per-compute-step frozen output exponents
+
+``tests/test_executor.py::test_golden_int8_program`` replays the same
+compile and compares bit-for-bit. Only regenerate when the quantization
+semantics change *intentionally* — and say so in the commit.
+"""
+
+import os
+import sys
+import zlib
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.core import workload as W                     # noqa: E402
+from repro.core.program import compile_model             # noqa: E402
+from repro.models import cnn                             # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+N_FRAMES = 2
+N_SAMPLE = 32
+
+
+def golden_for(model_name: str) -> dict:
+    m = W.CNN_MODELS[model_name]()
+    params = cnn.init_params(m, jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, m.input_hw, m.input_hw, m.input_ch))
+    prog = compile_model(m, params, bits=8, calib_batch=calib)
+    frames = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(2), (N_FRAMES, m.input_hw, m.input_hw,
+                                m.input_ch)), np.float32)
+    runner = prog.compile_runner(route="f32")
+    acc = np.asarray(runner(runner.quantize(frames)))
+    assert acc.dtype == np.int32, acc.dtype
+    logits = runner.dequantize(acc)
+    return {
+        "acc_sample": acc[0].reshape(-1)[:N_SAMPLE].astype(np.int32),
+        "acc_crc": np.int64(zlib.crc32(np.ascontiguousarray(acc).tobytes())),
+        "top1": np.argmax(logits.reshape(N_FRAMES, -1), -1).astype(np.int64),
+        "e_input": np.int64(prog.e_input),
+        "e_out": np.asarray([s.e_out for s in prog.steps
+                             if s.kind != "pool"], np.int64),
+    }
+
+
+def main(argv=None) -> int:
+    models = (argv or sys.argv[1:]) or ["zf", "yolo"]
+    for name in models:
+        data = golden_for(name)
+        out = os.path.join(HERE, f"{name}.npz")
+        np.savez(out, **data)
+        print(f"wrote {out}: top1={data['top1'].tolist()} "
+              f"crc={int(data['acc_crc'])} e_input={int(data['e_input'])}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

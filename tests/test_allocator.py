@@ -7,10 +7,9 @@ from hypcompat import given, settings, st
 
 from repro.core import throughput as T
 from repro.core import workload as W
-from repro.core.allocator import (LayerAlloc, _decompose_theta,
-                                  _partition_min_max, allocate_buffers,
-                                  allocate_compute, engine_cycles,
-                                  plan_pipeline, total_bram)
+from repro.core.allocator import (_decompose_theta, _partition_min_max,
+                                  allocate_buffers, allocate_compute,
+                                  engine_cycles, plan_pipeline, total_bram)
 from repro.core.workload import LayerWorkload
 
 THETA = 900

@@ -1,0 +1,219 @@
+"""Jitted batched executor: bit-identity with the eager per-sample path
+(all routes), streaming micro-batch semantics, recompile/donation guards,
+and the YOLO/ZF golden int8 outputs."""
+
+import importlib.util
+import os
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import workload as W
+from repro.core.executor import EngineExecutor
+from repro.core.program import compile_model
+from repro.models import cnn
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _tiny():
+    """Small graph exercising every step kind: strided conv stem, pool,
+    grouped conv, fc head."""
+    m = W.CNNModel("tiny", 16, 4, (
+        W.ConvLayer("c1", 4, 8, 3),
+        W.ConvLayer("p1", 8, 8, 2, stride=2, kind="pool"),
+        W.ConvLayer("c2", 8, 8, 3, groups=2),
+        W.ConvLayer("fc", 8 * 8 * 8, 10, 1, kind="fc"),
+    ))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 4))
+    prog = compile_model(m, p, bits=8, calib_batch=calib)
+    frames = np.asarray(jax.random.normal(jax.random.PRNGKey(2),
+                                          (11, 16, 16, 4)), np.float32)
+    return prog, frames
+
+
+def _eager(prog, frames, **kw):
+    return np.concatenate([np.asarray(prog.run(frames[i:i + 1], **kw))
+                           for i in range(len(frames))])
+
+
+@pytest.mark.parametrize("route", ["f32", "oracle", "kernel"])
+def test_runner_routes_bit_identical_to_eager(route):
+    """One jitted chain == the eager per-step loop, for every MAC
+    lowering (exact-f32 chunked conv, int32 oracle, Pallas kernel)."""
+    prog, frames = _tiny()
+    want = _eager(prog, frames)
+    runner = prog.compile_runner(route=route)
+    got = runner.logits(frames)
+    np.testing.assert_array_equal(got, want)
+    assert runner.cache_size() == 1
+
+
+def test_executor_stream_matches_eager():
+    """submit/drain over a non-multiple frame count: order preserved,
+    padding dropped, outputs bit-identical, stats consistent."""
+    prog, frames = _tiny()
+    want = _eager(prog, frames)
+    ex = EngineExecutor(prog, batch_size=4, output="logits")
+    got = np.stack(ex.serve(list(frames)))
+    np.testing.assert_array_equal(got, want)
+    assert ex.stats.frames == 11
+    assert ex.stats.batches == 3
+    assert ex.stats.padded_frames == 1
+    ids = EngineExecutor(prog, batch_size=4).serve(list(frames))
+    np.testing.assert_array_equal(
+        np.asarray(ids), np.argmax(want.reshape(len(frames), -1), -1))
+
+
+def test_executor_never_recompiles():
+    """Tail padding keeps the batch shape fixed: one XLA executable no
+    matter how many (partial) micro-batches stream through."""
+    prog, frames = _tiny()
+    ex = EngineExecutor(prog, batch_size=4)
+    ex.serve(list(frames))          # 2 full batches + padded tail
+    ex.submit(frames[:3])           # reuse across drains, partial again
+    ex.drain()
+    assert ex.runner.cache_size() == 1
+
+
+def test_donated_runner_still_correct():
+    """Forcing donation must not change results (CPU ignores the donation
+    with a warning; on TPU the int8 buffer is actually reused)."""
+    prog, frames = _tiny()
+    want = _eager(prog, frames[:4])
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # "donated buffers were not usable"
+        runner = prog.compile_runner(route="f32", donate=True)
+        got = runner.logits(frames[:4])
+        got2 = runner.logits(frames[:4])
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got2, want)
+    assert runner.cache_size() == 1
+
+
+def test_kernel_route_checked_up_front():
+    """A kernel request that cannot run raises at compile/jit time — no
+    silent per-step fallback to the oracle."""
+    m = W.CNNModel("tiny16", 8, 3, (W.ConvLayer("c1", 3, 4, 3),))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 3))
+    prog = compile_model(m, p, bits=16, calib_batch=x)
+    with pytest.raises(NotImplementedError):
+        prog.compile_runner(route="kernel")
+    with pytest.raises(NotImplementedError):
+        prog.run(x, use_kernel=True)
+    with pytest.raises(NotImplementedError):
+        cnn.forward(p, m, x, quantized=True, bits=16, use_kernel=True)
+    with pytest.raises(NotImplementedError):
+        prog.compile_runner(route="f32")   # exact-f32 needs int8 products
+    assert prog.compile_runner().route == "oracle"
+
+
+def test_f32_route_refuses_oversized_kernel():
+    """The exact-f32 proof needs R*S <= 1024 per chunk; a >32x32 kernel
+    must be refused at compile time, not silently lose bits."""
+    m = W.CNNModel("bigk", 40, 1, (W.ConvLayer("c1", 1, 2, 33),))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 40, 40, 1))
+    prog = compile_model(m, p, bits=8, calib_batch=x)
+    with pytest.raises(NotImplementedError):
+        prog.compile_runner(route="f32")
+    got = prog.compile_runner(route="oracle").logits(np.asarray(x))
+    np.testing.assert_array_equal(got, np.asarray(prog.run(x)))
+
+
+def test_stats_exclude_idle_between_drains():
+    """wall_s accumulates active serving windows only — host idle between
+    a drain and the next submit must not dilute steady_fps."""
+    import time
+    prog, frames = _tiny()
+    ex = EngineExecutor(prog, batch_size=4)
+    ex.serve(list(frames[:4]))
+    w1 = ex.stats.wall_s
+    time.sleep(1.0)
+    ex.serve(list(frames[4:8]))
+    assert ex.stats.frames == 8
+    assert ex.stats.wall_s - w1 < 0.8
+
+
+def test_plan_only_program_cannot_build_runner():
+    prog = compile_model(W.CNN_MODELS["alexnet"](), theta=900, bits=8)
+    with pytest.raises(ValueError):
+        prog.compile_runner()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", ["alexnet", "vgg16"])
+def test_batched_matches_eager_paper_models(model):
+    """Batched jitted runner == eager per-sample loop on the real paper
+    models (f32 route; AlexNet additionally pins the kernel route)."""
+    m = W.CNN_MODELS[model]()
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, m.input_hw, m.input_hw, m.input_ch))
+    prog = compile_model(m, p, bits=8, calib_batch=calib)
+    frames = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(2), (2, m.input_hw, m.input_hw, m.input_ch)),
+        np.float32)
+    want = _eager(prog, frames)
+    got = prog.compile_runner(route="f32").logits(frames)
+    np.testing.assert_array_equal(got, want)
+    if model == "alexnet":
+        got_k = prog.compile_runner(route="kernel").logits(frames)
+        np.testing.assert_array_equal(got_k, want)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", ["zf", "yolo"])
+def test_golden_int8_program(model):
+    """YOLO and ZF bit-exact against checked-in goldens (ROADMAP item):
+    raw int32 accumulators (sample + crc of the full buffer), top-1 ids,
+    and the frozen exponent schedule; frame 0 cross-checked against the
+    eager oracle."""
+    spec = importlib.util.spec_from_file_location(
+        "golden_generate", os.path.join(GOLDEN_DIR, "generate.py"))
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+    got = gen.golden_for(model)
+    want = np.load(os.path.join(GOLDEN_DIR, f"{model}.npz"))
+    np.testing.assert_array_equal(got["e_out"], want["e_out"])
+    assert int(got["e_input"]) == int(want["e_input"])
+    np.testing.assert_array_equal(got["acc_sample"], want["acc_sample"])
+    np.testing.assert_array_equal(got["top1"], want["top1"])
+    assert int(got["acc_crc"]) == int(want["acc_crc"])
+    # and the jitted batched path == the eager oracle on the same program
+    m = W.CNN_MODELS[model]()
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, m.input_hw, m.input_hw, m.input_ch))
+    prog = compile_model(m, p, bits=8, calib_batch=calib)
+    frame = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(2), (2, m.input_hw, m.input_hw, m.input_ch)),
+        np.float32)[:1]
+    y_eager = np.asarray(prog.run(frame))
+    runner = prog.compile_runner(route="f32")
+    acc0 = np.asarray(runner(runner.quantize(frame)))
+    np.testing.assert_array_equal(runner.dequantize(acc0), y_eager)
+    crc_full = zlib.crc32(np.ascontiguousarray(acc0).tobytes())
+    assert acc0.dtype == np.int32 and crc_full != 0
+
+
+def test_quantize_np_twin_bit_identical():
+    """Host-side numpy quantize == the jnp compile-time quantize,
+    including round-half-to-even ties and rail clipping."""
+    from repro.core import quant
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((3, 7, 7, 5)).astype(np.float32) * 40
+    x.reshape(-1)[:8] = [0.5, 1.5, 2.5, -0.5, -1.5, 300.0, -300.0, 0.0]
+    for e in (-3, 0, 2):
+        for bits in (8, 16):
+            a = np.asarray(quant.quantize_to_exponent(jnp.asarray(x), e,
+                                                      bits))
+            b = quant.quantize_to_exponent_np(x, e, bits)
+            np.testing.assert_array_equal(a, b)
+            assert b.dtype == (np.int8 if bits == 8 else np.int16)

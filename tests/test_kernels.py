@@ -109,7 +109,6 @@ def test_flash_attention_dtypes_window(dtype):
 
 def test_model_block_uses_scan_kernel_equivalence():
     """RG-LRU model path (associative scan) == chunked kernel semantics."""
-    from repro.models.recurrent import rglru_scan as model_scan
     key = jax.random.PRNGKey(3)
     B, S, D = 2, 64, 16
     a = jax.random.uniform(key, (B, S, D), jnp.float32, 0.8, 0.99)

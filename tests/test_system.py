@@ -4,7 +4,6 @@ resume semantics on the data stream."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro import optim
 from repro.configs import ARCHS, reduced
