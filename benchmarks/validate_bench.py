@@ -36,6 +36,10 @@ def validate(path: str) -> list[str]:
         errors.append("empty or missing 'models'")
         return errors
     for name, row in models.items():
+        if not isinstance(row, dict):
+            errors.append(f"models.{name}: row is "
+                          f"{type(row).__name__}, not object")
+            continue
         for key in REQUIRED_MODEL_KEYS:
             if key not in row:
                 errors.append(f"models.{name}: missing {key}")

@@ -10,12 +10,14 @@ and the paper's Algorithm-1 prediction for the same plan.
 
 import argparse
 
+from repro.core import workload as W
 from repro.launch.serve_cnn import serve
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default="alexnet")
+    ap.add_argument("--model", default="alexnet",
+                    choices=sorted(W.CNN_MODELS))
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--frames", type=int, default=24)
     args = ap.parse_args()

@@ -51,7 +51,9 @@ class ServeStats:
     def steady_fps(self) -> float:
         """Frames/s excluding the first dispatch (compile + warmup) —
         the analogue of the pipeline's steady-state rate, which is what
-        Algorithm 1's model predicts."""
+        Algorithm 1's model predicts. Returns 0.0 when every frame landed
+        in that first batch (stream <= one micro-batch): there is no
+        steady-state window to measure, not a measured rate of zero."""
         steady_wall = self.wall_s - self.first_batch_s
         steady_frames = self.frames - min(self.frames, self._first_n)
         if steady_wall <= 0 or steady_frames <= 0:

@@ -204,7 +204,9 @@ class EngineProgram:
         * ``"f32"`` (default for bits=8) — the int8 MACs run as chunked
           float32 convolutions/GEMMs: each partial sum accumulates at most
           1024 products of magnitude <= 2^14, so every intermediate is an
-          integer <= 2^24 and float32 arithmetic is *bit-exact*. This hits
+          integer <= 2^24 and float32 arithmetic is *bit-exact* (MACs are
+          pinned to ``Precision.HIGHEST`` so GPU TF32 / TPU bf16 lowering
+          cannot degrade them — see :func:`_step_exact_f32`). This hits
           the backend's fast f32 conv/GEMM paths (XLA CPU has no fast
           integer conv), ~10x over the int32 oracle on CPU.
         * ``"oracle"`` — the pure-jnp int32 oracle (default for bits=16,
@@ -291,7 +293,12 @@ class CompiledRunner:
 
     def __call__(self, xq) -> jnp.ndarray:
         """Dispatch one quantized batch; returns the device future of the
-        final accumulators (async — block or fetch to synchronize)."""
+        final accumulators (async — block or fetch to synchronize). With
+        donation on, a jnp input is copied first — ``jnp.asarray`` would
+        alias the caller's buffer, and donating that alias invalidates
+        the caller's array (host numpy input is always staged fresh)."""
+        if self.donate and isinstance(xq, jax.Array):
+            xq = jnp.array(xq, copy=True)
         return self.fn(jnp.asarray(xq))
 
     def dequantize(self, acc) -> np.ndarray:
@@ -314,8 +321,11 @@ class CompiledRunner:
 
     def cache_size(self) -> int:
         """Number of distinct XLA executables behind ``fn`` (recompile
-        guard: one batch shape must stay at 1)."""
-        return self.fn._cache_size()
+        guard: one batch shape must stay at 1). Reads a private JAX API;
+        returns -1 ("unknown") on jax versions that don't expose it
+        rather than breaking the serve path."""
+        probe = getattr(self.fn, "_cache_size", None)
+        return int(probe()) if callable(probe) else -1
 
 
 def kernel_available(bits: int = 8) -> tuple[bool, str]:
@@ -422,7 +432,14 @@ def _step_exact_f32(xq: jnp.ndarray, step: EngineStep) -> jnp.ndarray:
     int32, and the identical fused epilogue requantizes. Bit-identical to
     the int32 oracle and the Pallas kernel, but it reaches the backend's
     fast f32 conv/GEMM code paths (XLA CPU lowers integer convs to slow
-    generic loops)."""
+    generic loops).
+
+    The proof needs *true* IEEE float32 MACs, so every dot/conv here pins
+    ``Precision.HIGHEST``: with the default precision XLA lowers f32 on
+    Ampere+ GPUs to TF32 and on TPU to bf16 MXU passes, whose ~8-11-bit
+    mantissas cannot hold the 15-24-bit integer partial sums. HIGHEST
+    forces full-f32 arithmetic on GPU and the f32-exact multi-pass
+    algorithm on TPU."""
     lyr = step.layer
     wq = step.wq
     if step.kind == "fc":
@@ -430,8 +447,9 @@ def _step_exact_f32(xq: jnp.ndarray, step: EngineStep) -> jnp.ndarray:
         wf = wq.astype(jnp.float32)
         acc = jnp.zeros((x2.shape[0], wq.shape[-1]), jnp.int32)
         for k0 in range(0, x2.shape[1], _F32_CHUNK_MACS):
-            part = x2[:, k0:k0 + _F32_CHUNK_MACS] \
-                @ wf[k0:k0 + _F32_CHUNK_MACS]
+            part = jnp.matmul(x2[:, k0:k0 + _F32_CHUNK_MACS],
+                              wf[k0:k0 + _F32_CHUNK_MACS],
+                              precision=jax.lax.Precision.HIGHEST)
             acc = acc + part.astype(jnp.int32)
     else:
         R, S, Cg, M = wq.shape
@@ -453,7 +471,8 @@ def _step_exact_f32(xq: jnp.ndarray, step: EngineStep) -> jnp.ndarray:
                 xs, wf[:, :, c0:c0 + cc, :],
                 (lyr.stride, lyr.stride), ((lo, hi), (lo, hi)),
                 dimension_numbers=("NHWC", "HWIO", "NHWC"),
-                feature_group_count=groups).astype(jnp.int32)
+                feature_group_count=groups,
+                precision=jax.lax.Precision.HIGHEST).astype(jnp.int32)
             acc = part if acc is None else acc + part
     return _epilogue_int32(acc, step)
 

@@ -32,6 +32,12 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
     """Compile ``model_name``, serve ``frames`` synthetic frames, return a
     result dict (measured/modeled FPS). ``eager_frames > 0`` also times
     the eager per-sample reference loop for comparison."""
+    if frames <= batch:
+        raise ValueError(
+            f"frames={frames} <= batch={batch}: the whole stream fits in "
+            f"the first micro-batch, which is charged to compile/warmup, "
+            f"leaving no steady-state window to measure (steady_fps would "
+            f"be 0). Use frames >= 2*batch.")
     m = W.CNN_MODELS[model_name]()
     params = cnn.init_params(m, jax.random.PRNGKey(seed))
     calib = jax.random.normal(
@@ -55,6 +61,9 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
     outs = ex.serve(stream)
     st = ex.stats
 
+    # cache_size() counts XLA executables (1 = compiled once, never
+    # recompiled); -1 means the running jax doesn't expose the counter.
+    n_exec = ex.runner.cache_size()
     result = {
         "model": model_name,
         "bits": bits,
@@ -66,7 +75,8 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
         "compile_plus_first_batch_s": round(st.first_batch_s, 3),
         "measured_steady_fps": round(st.steady_fps, 3),
         "modeled_fps_alg1": round(prog.fps(), 3),
-        "recompiles": ex.runner.cache_size(),
+        "executables": n_exec,
+        "recompiles": (n_exec - 1) if n_exec >= 0 else None,
         "sample_top1": [int(np.asarray(o).reshape(-1).argmax())
                         if output == "logits" else int(o)
                         for o in outs[:4]],
@@ -87,7 +97,8 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
               f" batch={batch}: measured {result['measured_steady_fps']:.2f}"
               f" fps (steady), modeled {hw_fps:.1f} fps (Alg. 1 @200MHz)"
               f" | first batch {st.first_batch_s:.1f}s"
-              f" | recompiles={result['recompiles']}")
+              f" | recompiles="
+              f"{'?' if result['recompiles'] is None else result['recompiles']}")
         if "eager_fps" in result:
             print(f"[serve_cnn]   eager per-sample {result['eager_fps']:.2f}"
                   f" fps -> {result['speedup_vs_eager']:.1f}x batched")

@@ -135,10 +135,16 @@ def test_stats_exclude_idle_between_drains():
     ex = EngineExecutor(prog, batch_size=4)
     ex.serve(list(frames[:4]))
     w1 = ex.stats.wall_s
-    time.sleep(1.0)
+    time.sleep(0.25)
+    t0 = time.perf_counter()
     ex.serve(list(frames[4:8]))
+    window = time.perf_counter() - t0
     assert ex.stats.frames == 8
-    assert ex.stats.wall_s - w1 < 0.8
+    # The recorded wall time may grow by at most the measured active
+    # serve window — never by the idle sleep before it. Bounding against
+    # the measurement (not a fixed constant) keeps this stable on slow
+    # CI runners.
+    assert ex.stats.wall_s - w1 <= window + 0.05
 
 
 def test_plan_only_program_cannot_build_runner():
