@@ -17,8 +17,15 @@ bench:
 .PHONY: bench-quick
 bench-quick:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_bench.py --quick --out BENCH_serve.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --quick --out BENCH_serve_async.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
-	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve.json BENCH_serve_async.json
+
+# Full async serving sweep (all four models, K in {1,2,4}, batch 32).
+.PHONY: bench-async
+bench-async:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --out BENCH_serve_async.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_async.json
 
 .PHONY: lint
 lint:

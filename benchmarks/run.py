@@ -3,6 +3,8 @@
   table1    : paper Table I (4 CNNs on ZC706-class budget) + baselines
   serve     : measured-vs-modeled serving FPS (jitted batched executor
               vs eager loop vs Algorithm 1) -> BENCH_serve.json
+  serve-async : single-jit vs K-stage pipelined serving (throughput +
+              request latency percentiles) -> BENCH_serve_async.json
   ablation  : allocator objectives (paper greedy / exact / waterfill)
               + pipeline stage balance on the TPU mesh
   roofline  : three-term roofline per (arch x shape x mesh) cell
@@ -39,8 +41,8 @@ def print_csv(lines: list[str]) -> None:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("which", nargs="?", default="all",
-                    choices=("all", "table1", "serve", "ablation",
-                             "roofline", "kernels"))
+                    choices=("all", "table1", "serve", "serve-async",
+                             "ablation", "roofline", "kernels"))
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI setting (AlexNet-only, small batch)")
     args = ap.parse_args(argv)
@@ -52,6 +54,9 @@ def main(argv=None) -> int:
     if only in ("all", "serve"):
         from benchmarks import serve_bench
         serve_bench.run(emit, quick=args.quick)
+    if only in ("all", "serve-async"):
+        from benchmarks import serve_async_bench
+        serve_async_bench.run(emit, quick=args.quick)
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run_objectives(emit)

@@ -26,10 +26,12 @@ DEFAULT_OUT = "BENCH_serve.json"
 
 
 def bench_model(model: str, *, batch: int, frames: int,
-                eager_frames: int) -> dict:
+                eager_frames: int, seed: int = 0) -> dict:
     """One model: serve a synthetic stream through the jitted executor,
-    time the eager reference loop, and attach the analytic Table-I row."""
-    measured = serve(model, frames=frames, batch=batch,
+    time the eager reference loop, and attach the analytic Table-I row.
+    ``seed`` pins the params/calibration/stream RNGs explicitly so the
+    measured-vs-modeled rows are reproducible run to run."""
+    measured = serve(model, frames=frames, batch=batch, seed=seed,
                      eager_frames=eager_frames, verbose=True)
     measured["modeled"] = {
         k: (round(v, 4) if isinstance(v, float) else v)
@@ -38,7 +40,8 @@ def bench_model(model: str, *, batch: int, frames: int,
 
 
 def run(emit, *, quick: bool = False, batch: int | None = None,
-        out: str = DEFAULT_OUT, models: list[str] | None = None) -> dict:
+        out: str = DEFAULT_OUT, models: list[str] | None = None,
+        seed: int = 0) -> dict:
     if models is None:
         models = ["alexnet"] if quick else list(W.CNN_MODELS)
     if batch is None:
@@ -50,6 +53,7 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         "bench": "serve",
         "quick": quick,
         "batch": batch,
+        "seed": seed,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "jax_version": jax.__version__,
         "backend": jax.devices()[0].platform,
@@ -58,7 +62,7 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
     }
     for model in models:
         r = bench_model(model, batch=batch, frames=frames,
-                        eager_frames=eager_frames)
+                        eager_frames=eager_frames, seed=seed)
         data["models"][model] = r
         emit(f"serve/{model}/batched_fps", 0.0,
              f"{r['measured_steady_fps']}fps|batch={batch}")
@@ -79,6 +83,9 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="AlexNet only, small batch (CI bench-smoke)")
     ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="explicit params/calibration/stream RNG seed "
+                         "(recorded in the artifact)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--model", action="append", default=None,
                     choices=sorted(W.CNN_MODELS), dest="models")
@@ -90,7 +97,7 @@ def main(argv=None) -> int:
         csv.append(f"{name},{us:.1f},{derived}")
 
     run(emit, quick=args.quick, batch=args.batch, out=args.out,
-        models=args.models)
+        models=args.models, seed=args.seed)
     print_csv(csv)
     return 0
 

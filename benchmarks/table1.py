@@ -131,20 +131,22 @@ def run(emit, models: list[str] | None = None, quick: bool = False):
          f"{ours/gops_w:.2f}x_vs_paper_1.53x")
 
     # ---- Algorithm 2: BRAM / bandwidth row (Table I "BRAM")
-    from repro.core.allocator import total_bram
-    import math
+    from repro.core.allocator import total_bram, weight_traffic_per_frame
     paper_bram = {"vgg16": 0.74, "alexnet": 0.84, "zf": 0.58, "yolo": 0.76}
     print("\n== Algorithm 2: BRAM/bandwidth (1090 BRAM18, 4.2 GB/s DDR) ==")
     for model, fn in W.CNN_MODELS.items():
         allocs = compile_model(fn(), theta=THETA, bits=16, bram_total=1090,
-                               bandwidth_bytes=4.2e9, freq_hz=FREQ).allocs
-        bram18 = total_bram(allocs, act_bytes=2)
-        traffic = sum(a.layer.weight_bytes * math.ceil(a.layer.H / a.K)
-                      for a in allocs if a.layer.kind == "conv")
+                               bandwidth_bytes=4.2e9, freq_hz=FREQ,
+                               bram_weights=True).allocs
+        act18 = total_bram(allocs, act_bytes=2)
+        bram18 = total_bram(allocs, act_bytes=2, weights=True)
+        n_res = sum(a.weights_resident for a in allocs)
+        traffic = sum(weight_traffic_per_frame(a) for a in allocs
+                      if a.layer.kind == "conv")
         bw = T.pipeline_fps(allocs, freq_hz=FREQ) * traffic / 1e9
-        print(f"  {model:8s} act-buffer BRAM {bram18/1090:4.0%} "
-              f"(paper total {paper_bram[model]:.0%}; ours models the "
-              f"activation line buffers only), DDR {bw:.1f} GB/s")
+        print(f"  {model:8s} BRAM {bram18/1090:4.0%} (act {act18}, weight "
+              f"{bram18 - act18}, {n_res} resident weight set(s); paper "
+              f"total {paper_bram[model]:.0%}), DDR {bw:.1f} GB/s")
         emit(f"table1/{model}/bram", 0.0,
              f"{bram18}of1090|paper={paper_bram[model]}")
     return rows

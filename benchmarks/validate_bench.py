@@ -1,11 +1,18 @@
-"""Validate a BENCH_serve.json artifact (CI bench-smoke gate).
+"""Validate BENCH_*.json artifacts (CI bench-smoke gate).
 
-Exits non-zero when the file is missing, is not valid JSON, records no
-models, or any model row lacks a positive measured/modeled FPS — so a
-benchmark run that silently produced garbage cannot upload a green
-artifact.
+Exits non-zero when a file is missing, is not valid JSON, records no
+models, or any row lacks the numbers its schema requires — so a benchmark
+run that silently produced garbage cannot upload a green artifact.
 
-  python benchmarks/validate_bench.py BENCH_serve.json
+Schemas are selected by the artifact's ``bench`` field:
+
+* ``serve`` — measured-vs-modeled FPS per model
+  (``benchmarks/serve_bench.py``);
+* ``serve_async`` — per stage count K: steady throughput, p50/p95/p99
+  request latency, and throughput relative to the K=1 single-jit baseline
+  (``benchmarks/serve_async_bench.py``).
+
+  python benchmarks/validate_bench.py BENCH_serve.json BENCH_serve_async.json
 """
 
 from __future__ import annotations
@@ -16,6 +23,60 @@ import sys
 REQUIRED_MODEL_KEYS = ("measured_steady_fps", "eager_fps",
                        "speedup_vs_eager", "modeled_fps_alg1", "batch",
                        "frames", "route")
+
+REQUIRED_STAGE_KEYS = ("measured_steady_fps", "modeled_fps_alg1",
+                       "arrival_fps",
+                       "latency_ms_p50", "latency_ms_p95",
+                       "latency_ms_p99", "stages", "boundaries",
+                       "stage_balance", "batch", "frames", "route")
+POSITIVE_STAGE_KEYS = ("measured_steady_fps", "arrival_fps",
+                       "latency_ms_p50", "latency_ms_p95",
+                       "latency_ms_p99", "throughput_vs_single_jit")
+
+
+def _positive(row: dict, key: str) -> bool:
+    v = row.get(key)
+    return isinstance(v, (int, float)) and v > 0
+
+
+def _validate_serve_model(name: str, row: dict, errors: list[str]) -> None:
+    for key in REQUIRED_MODEL_KEYS:
+        if key not in row:
+            errors.append(f"models.{name}: missing {key}")
+    for key in ("measured_steady_fps", "eager_fps", "modeled_fps_alg1"):
+        if not _positive(row, key):
+            errors.append(f"models.{name}.{key}={row.get(key)!r} not > 0")
+
+
+def _validate_async_model(name: str, row: dict, errors: list[str]) -> None:
+    stages = row.get("stages")
+    if not isinstance(stages, dict) or not stages:
+        errors.append(f"models.{name}: empty or missing 'stages'")
+        return
+    # The K=1 baseline ratio exists iff a K=1 run is in the sweep.
+    has_baseline = isinstance(stages.get("1"), dict)
+    for k, srow in stages.items():
+        where = f"models.{name}.stages.{k}"
+        if not isinstance(srow, dict):
+            errors.append(f"{where}: row is {type(srow).__name__}, "
+                          f"not object")
+            continue
+        required = REQUIRED_STAGE_KEYS + (
+            ("throughput_vs_single_jit",) if has_baseline else ())
+        for key in required:
+            if key not in srow:
+                errors.append(f"{where}: missing {key}")
+        for key in POSITIVE_STAGE_KEYS:
+            if key in srow and not _positive(srow, key):
+                errors.append(f"{where}.{key}={srow.get(key)!r} not > 0")
+        if str(k).isdigit() and srow.get("stages") != int(k):
+            errors.append(f"{where}: stage count {srow.get('stages')!r} "
+                          f"does not match key {k!r}")
+        if srow.get("latency_ms_p50") and srow.get("latency_ms_p99") and \
+                srow["latency_ms_p99"] < srow["latency_ms_p50"]:
+            errors.append(f"{where}: p99 < p50 "
+                          f"({srow['latency_ms_p99']} < "
+                          f"{srow['latency_ms_p50']})")
 
 
 def validate(path: str) -> list[str]:
@@ -31,6 +92,10 @@ def validate(path: str) -> list[str]:
         return [f"{path}: top level is {type(data).__name__}, not object"]
     if data.get("schema_version") != 1:
         errors.append(f"schema_version={data.get('schema_version')!r} != 1")
+    bench = data.get("bench", "serve")
+    if bench not in ("serve", "serve_async"):
+        errors.append(f"unknown bench kind {bench!r}")
+        return errors
     models = data.get("models")
     if not isinstance(models, dict) or not models:
         errors.append("empty or missing 'models'")
@@ -40,28 +105,28 @@ def validate(path: str) -> list[str]:
             errors.append(f"models.{name}: row is "
                           f"{type(row).__name__}, not object")
             continue
-        for key in REQUIRED_MODEL_KEYS:
-            if key not in row:
-                errors.append(f"models.{name}: missing {key}")
-        for key in ("measured_steady_fps", "eager_fps", "modeled_fps_alg1"):
-            v = row.get(key)
-            if not isinstance(v, (int, float)) or not v > 0:
-                errors.append(f"models.{name}.{key}={v!r} not > 0")
+        if bench == "serve":
+            _validate_serve_model(name, row, errors)
+        else:
+            _validate_async_model(name, row, errors)
     return errors
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
-    path = argv[0] if argv else "BENCH_serve.json"
-    errors = validate(path)
-    if errors:
-        for e in errors:
-            print(f"[validate_bench] FAIL: {e}", file=sys.stderr)
-        return 1
-    with open(path) as f:
-        n = len(json.load(f)["models"])
-    print(f"[validate_bench] OK: {path} ({n} model(s))")
-    return 0
+    paths = argv if argv else ["BENCH_serve.json"]
+    bad = False
+    for path in paths:
+        errors = validate(path)
+        if errors:
+            bad = True
+            for e in errors:
+                print(f"[validate_bench] FAIL: {e}", file=sys.stderr)
+            continue
+        with open(path) as f:
+            n = len(json.load(f)["models"])
+        print(f"[validate_bench] OK: {path} ({n} model(s))")
+    return 1 if bad else 0
 
 
 if __name__ == "__main__":

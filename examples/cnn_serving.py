@@ -5,13 +5,21 @@ the jitted batched runner, then streams frames through the micro-batching
 executor — compare the steady-state FPS against the eager per-sample loop
 and the paper's Algorithm-1 prediction for the same plan.
 
+With ``--stages K`` the same program is served through the stage-pipelined
+subsystem instead: Algorithm 1's balance objective splits the step chain
+into K near-equal stages, one worker thread per stage with depth-2
+queues (the activation double-buffer analogue), and the async frontend
+batches an open-loop request stream into it, reporting p50/p95/p99
+request latency.
+
   PYTHONPATH=src python examples/cnn_serving.py [--model alexnet]
+  PYTHONPATH=src python examples/cnn_serving.py --stages 2
 """
 
 import argparse
 
 from repro.core import workload as W
-from repro.launch.serve_cnn import serve
+from repro.launch.serve_cnn import serve, serve_async
 
 
 def main():
@@ -20,13 +28,28 @@ def main():
                     choices=sorted(W.CNN_MODELS))
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--frames", type=int, default=24)
+    ap.add_argument("--stages", type=int, default=0,
+                    help="serve through the K-stage pipeline + async "
+                         "frontend (0 = single-jit executor)")
     args = ap.parse_args()
-    r = serve(args.model, frames=args.frames, batch=args.batch,
-              eager_frames=2)
-    print(f"\nsteady-state {r['measured_steady_fps']:.1f} fps at batch "
-          f"{r['batch']} vs {r['eager_fps']:.2f} fps eager "
-          f"({r['speedup_vs_eager']:.0f}x) — modeled pipeline "
-          f"{r['modeled_fps_alg1']:.0f} fps @200MHz")
+    if args.stages > 0:
+        r = serve_async(args.model, frames=args.frames, batch=args.batch,
+                        stages=args.stages)
+        print(f"\n{r['stages']}-stage pipeline (boundaries "
+              f"{r['boundaries']}, balance {r['stage_balance']:.2f}): "
+              f"steady {r['measured_steady_fps']:.1f} fps at batch "
+              f"{r['batch']}; open-loop {r['arrival_fps']:.1f} fps -> "
+              f"p50 {r['latency_ms_p50']:.1f} ms, p95 "
+              f"{r['latency_ms_p95']:.1f} ms, p99 "
+              f"{r['latency_ms_p99']:.1f} ms — modeled pipeline "
+              f"{r['modeled_fps_alg1']:.0f} fps @200MHz")
+    else:
+        r = serve(args.model, frames=args.frames, batch=args.batch,
+                  eager_frames=2)
+        print(f"\nsteady-state {r['measured_steady_fps']:.1f} fps at batch "
+              f"{r['batch']} vs {r['eager_fps']:.2f} fps eager "
+              f"({r['speedup_vs_eager']:.0f}x) — modeled pipeline "
+              f"{r['modeled_fps_alg1']:.0f} fps @200MHz")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ class LayerAlloc:
     Cp: int             # input-channel parallelism C'
     Mp: int             # output-channel parallelism M'
     K: int = 1          # row parallelism (Algorithm 2)
+    weights_resident: bool = False   # full weight set pinned in BRAM
     cycle_model: str = "packed"   # see engine_cycles()
 
     @property
@@ -388,18 +389,50 @@ def bram_for_layer(alloc: LayerAlloc, prev_K: int, act_bytes: int = 1) -> int:
     return per_buf * n_chan_buf
 
 
-def total_bram(allocs: Sequence[LayerAlloc], act_bytes: int = 1) -> int:
+def weight_bram_for_layer(alloc: LayerAlloc, weight_bytes_el: int = 1) -> int:
+    """Weight-buffer BRAM18 blocks for one compute engine.
+
+    Non-resident engines stream their weights from DDR through a
+    *double-buffered* ping-pong tile holding the PE grid's working set
+    (C' x M' x R x S weights: one half feeds the multipliers while DDR
+    fills the other — the weight-side twin of the activation double
+    buffer). Engines Algorithm 2 marked ``weights_resident`` instead pin
+    the full weight set on-chip (one copy, loaded once per frame), which
+    collapses their reload traffic from ``omega_i = weight_bytes *
+    ceil(H/K)`` to a single ``weight_bytes`` fetch.
+    """
+    l = alloc.layer
+    if l.macs == 0:
+        return 0
+    if alloc.weights_resident:
+        return max(1, math.ceil(l.weight_bytes / BRAM18_BYTES))
+    tile = alloc.Cp * alloc.Mp * l.R * l.S * weight_bytes_el
+    return 2 * max(1, math.ceil(tile / BRAM18_BYTES))
+
+
+def total_bram(allocs: Sequence[LayerAlloc], act_bytes: int = 1, *,
+               weights: bool = False,
+               weight_bytes_el: int | None = None) -> int:
+    """Total BRAM18 blocks: activation line buffers always; with
+    ``weights=True`` also the weight buffers (streaming ping-pong tiles +
+    any resident weight sets — the Table I "BRAM" column model)."""
     total, prev_K = 0, 1
     for a in allocs:
         if a.layer.kind in ("conv", "pool"):
             total += bram_for_layer(a, prev_K, act_bytes)
             prev_K = a.K
+        if weights:
+            total += weight_bram_for_layer(
+                a, act_bytes if weight_bytes_el is None else weight_bytes_el)
     return total
 
 
 def weight_traffic_per_frame(a: LayerAlloc) -> float:
     """Bytes of weights fetched from DDR per frame: a full reload once per
-    K output rows (omega_i in Algorithm 2)."""
+    K output rows (omega_i in Algorithm 2); a single load for engines
+    whose weights are pinned on-chip."""
+    if a.weights_resident:
+        return float(a.layer.weight_bytes)
     reloads = max(1, math.ceil(a.layer.H / max(1, a.K)))
     return a.layer.weight_bytes * reloads
 
@@ -411,6 +444,8 @@ def allocate_buffers(
     bandwidth_bytes: float,
     freq_hz: float,
     act_bytes: int = 1,
+    weights: bool = False,
+    strict: bool = False,
     max_iters: int = 100_000,
 ) -> list[LayerAlloc]:
     """Algorithm 2 — raise row parallelism K_i to fit the bandwidth roof.
@@ -418,14 +453,37 @@ def allocate_buffers(
     While the aggregate weight traffic B = FPS * sum(omega_i) exceeds the
     board bandwidth beta, bump K of the worst-traffic conv layer, paying
     activation-buffer BRAMs; stop when BRAM budget alpha would be exceeded.
+
+    With ``weights=True`` the alpha test also charges weight buffers
+    (:func:`weight_bram_for_layer`: double-buffered streaming tiles), and
+    a second phase spends the surplus BRAM pinning whole conv weight sets
+    on-chip — greedily by DDR traffic saved per BRAM block — which cuts
+    reload traffic beyond what K alone can (the model behind the paper's
+    reported BRAM utilization totals; see ``tests/test_allocator.py``'s
+    regression against Table I).
+
+    The phases only ever *add* BRAM to a K=1 baseline, so a budget the
+    baseline itself does not fit is returned as-is (best effort, the
+    paper assumes alpha covers the mandatory buffers); pass
+    ``strict=True`` to get a ``ValueError`` instead of a silently
+    over-budget plan (e.g. when sweeping small boards for feasibility).
     """
     from repro.core.throughput import pipeline_fps
 
     convs = [a for a in allocs if a.layer.macs > 0 and a.layer.kind == "conv"]
 
+    def used() -> int:
+        return total_bram(allocs, act_bytes, weights=weights)
+
     def demand() -> float:
         f = pipeline_fps(allocs, freq_hz=freq_hz)
         return f * sum(weight_traffic_per_frame(a) for a in convs)
+
+    if strict and used() > bram_total:
+        raise ValueError(
+            f"BRAM budget alpha={bram_total} cannot hold the K=1 "
+            f"baseline ({used()} blocks of mandatory activation"
+            f"{'/weight' if weights else ''} buffers)")
 
     for _ in range(max_iters):
         if demand() <= bandwidth_bytes:
@@ -434,9 +492,27 @@ def allocate_buffers(
         if cand.K >= cand.layer.H:
             break
         cand.K += 1
-        if total_bram(allocs, act_bytes) > bram_total:
+        if used() > bram_total:
             cand.K -= 1
             break
+    if not weights:
+        return allocs
+
+    # Phase 2 — weight residency: surplus alpha buys the hottest weight
+    # streams a permanent home. Order by traffic saved per BRAM block so
+    # a huge layer cannot starve two cheaper, hotter ones.
+    def saving(a: LayerAlloc) -> float:
+        reloads = max(1, math.ceil(a.layer.H / max(1, a.K)))
+        return a.layer.weight_bytes * (reloads - 1)
+
+    def blocks(a: LayerAlloc) -> int:
+        return max(1, math.ceil(a.layer.weight_bytes / BRAM18_BYTES))
+
+    for a in sorted((a for a in convs if saving(a) > 0),
+                    key=lambda a: saving(a) / blocks(a), reverse=True):
+        a.weights_resident = True
+        if used() > bram_total:
+            a.weights_resident = False
     return allocs
 
 

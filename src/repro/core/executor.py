@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
-from typing import Iterable
+from typing import Callable, Iterable
 
 import jax
 import numpy as np
@@ -34,6 +35,51 @@ from repro.core.program import CompiledRunner, EngineProgram
 # activation memory: one batch computing on-device, one being staged
 # host-side; a deeper queue only adds memory, not throughput.
 DEFAULT_MAX_INFLIGHT = 2
+
+
+def normalize_frames(program: EngineProgram,
+                     frame: np.ndarray) -> np.ndarray:
+    """Accept one ``[H, W, C]`` frame or a pre-batched ``[N, H, W, C]``
+    chunk, validate it against ``program``'s input spec, and return the
+    ``[N, H, W, C]`` form — the submit()-side twin of
+    :func:`pad_micro_batch`, shared by both executors."""
+    frame = np.asarray(frame)
+    if frame.ndim == 3:
+        frames = frame[None]
+    elif frame.ndim == 4:
+        frames = frame
+    else:
+        raise ValueError(f"expected [H,W,C] or [N,H,W,C], got "
+                         f"{frame.shape}")
+    hw = program.model.input_hw
+    if frames.shape[1:] != (hw, hw, program.model.input_ch):
+        raise ValueError(
+            f"frame shape {frames.shape[1:]} does not match the "
+            f"compiled program ({hw}, {hw}, {program.model.input_ch})")
+    return frames
+
+
+def pad_micro_batch(program: EngineProgram, frames: np.ndarray,
+                    batch_size: int) -> np.ndarray:
+    """Validate a ``[B, H, W, C]`` micro-batch against ``program``'s input
+    spec and zero-pad it to ``batch_size`` (the fixed compiled shape) —
+    the one batch-shaping rule both the single-jit and the pipelined
+    executor share."""
+    frames = np.asarray(frames)
+    hw = program.model.input_hw
+    if frames.ndim != 4 or frames.shape[1:] != (hw, hw,
+                                                program.model.input_ch):
+        raise ValueError(
+            f"micro-batch shape {frames.shape} does not match the "
+            f"compiled program [B, {hw}, {hw}, {program.model.input_ch}]")
+    if len(frames) > batch_size:
+        raise ValueError(f"micro-batch of {len(frames)} exceeds the "
+                         f"compiled batch size {batch_size}")
+    if len(frames) < batch_size:
+        pad = np.zeros((batch_size - len(frames),) + frames.shape[1:],
+                       frames.dtype)
+        frames = np.concatenate([frames, pad], axis=0)
+    return frames
 
 
 @dataclasses.dataclass
@@ -76,16 +122,24 @@ class EngineExecutor:
     def __init__(self, program: EngineProgram, *, batch_size: int = 32,
                  route: str | None = None, interpret: bool | None = None,
                  donate: bool | None = None, output: str = "top1",
-                 max_inflight: int = DEFAULT_MAX_INFLIGHT):
+                 max_inflight: int = DEFAULT_MAX_INFLIGHT,
+                 on_result: Callable[[object, np.ndarray], None] | None = None):
         if output not in ("top1", "logits"):
             raise ValueError(f"unknown output {output!r}")
         self.program = program
         self.batch_size = int(batch_size)
         self.output = output
+        self.on_result = on_result
         self.runner: CompiledRunner = program.compile_runner(
             route=route, interpret=interpret, donate=donate)
         self.stats = ServeStats()
         self.stats._first_n = self.batch_size
+        # One lock serializes the pending micro-batch, the in-flight
+        # queue, and stats, so multiple producer threads (the async
+        # frontend's batcher plus direct callers) can feed one executor
+        # without corrupting the tail-padding path. Re-entrant because
+        # _dispatch collects under the same lock when back-pressured.
+        self._lock = threading.RLock()
         self._pending: list[np.ndarray] = []
         self._inflight: collections.deque = collections.deque()
         self._max_inflight = max(1, int(max_inflight))
@@ -98,25 +152,32 @@ class EngineExecutor:
         """Queue one float frame ``[H, W, C]`` (or a pre-batched
         ``[N, H, W, C]`` chunk); dispatches whenever ``batch_size``
         frames are buffered."""
-        frame = np.asarray(frame)
-        hw = self.program.model.input_hw
-        if frame.ndim == 3:
-            frames = frame[None]
-        elif frame.ndim == 4:
-            frames = frame
-        else:
-            raise ValueError(f"expected [H,W,C] or [N,H,W,C], got "
-                             f"{frame.shape}")
-        if frames.shape[1:] != (hw, hw, self.program.model.input_ch):
-            raise ValueError(
-                f"frame shape {frames.shape[1:]} does not match the "
-                f"compiled program ({hw}, {hw}, "
-                f"{self.program.model.input_ch})")
-        for f in frames:
-            self._pending.append(f)
-            if len(self._pending) >= self.batch_size:
-                self._dispatch(self._pending[:self.batch_size])
-                self._pending = self._pending[self.batch_size:]
+        frames = normalize_frames(self.program, frame)
+        with self._lock:
+            for f in frames:
+                self._pending.append(f)
+                if len(self._pending) >= self.batch_size:
+                    self._dispatch(self._pending[:self.batch_size])
+                    self._pending = self._pending[self.batch_size:]
+
+    def submit_batch(self, frames: np.ndarray, n_valid: int,
+                     tag: object = None) -> None:
+        """Dispatch one pre-assembled micro-batch ``[B, H, W, C]``
+        directly (padded with zero frames to the compiled batch size if
+        short), bypassing the pending buffer — the entry point the async
+        frontend's batcher uses. ``tag`` is handed to ``on_result``
+        with this batch's outputs. Thread-safe; blocks when
+        ``max_inflight`` batches are already on device."""
+        batch = pad_micro_batch(self.program, frames, self.batch_size)
+        with self._lock:
+            self._dispatch(batch, n_valid=n_valid, tag=tag)
+
+    def flush_inflight(self) -> None:
+        """Collect every dispatched micro-batch (delivering their
+        ``on_result`` callbacks) without flushing the pending tail."""
+        with self._lock:
+            while self._inflight:
+                self._collect_one()
 
     def serve(self, frames: Iterable[np.ndarray]) -> list[np.ndarray]:
         """Convenience: submit a finite stream and drain."""
@@ -126,16 +187,21 @@ class EngineExecutor:
 
     # -- the overlap core ----------------------------------------------------
 
-    def _dispatch(self, frames: list[np.ndarray], n_valid: int | None = None):
-        """Host quantize-in + async device dispatch of one micro-batch.
+    def _dispatch(self, frames, n_valid: int | None = None,
+                  tag: object = None):
+        """Host quantize-in + async device dispatch of one micro-batch
+        (a list of frames from the pending buffer, or an already-stacked
+        ``[B, H, W, C]`` array — no re-stacking copy on that path).
         Blocks only when ``max_inflight`` batches are already on device
-        (the double-buffer back-pressure)."""
+        (the double-buffer back-pressure). Caller holds the lock."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
         while len(self._inflight) >= self._max_inflight:
             self._collect_one()
         n = n_valid if n_valid is not None else len(frames)
-        xq = self.runner.quantize(np.stack(frames))
+        batch = (frames if isinstance(frames, np.ndarray)
+                 else np.stack(frames))
+        xq = self.runner.quantize(batch)
         t0 = time.perf_counter()
         acc = self.runner(xq)          # async: returns a device future
         if self.stats.batches == 0:
@@ -143,41 +209,47 @@ class EngineExecutor:
             # separately so steady_fps reflects the pipeline, not the jit.
             jax.block_until_ready(acc)
             self.stats.first_batch_s = time.perf_counter() - t0
-        self._inflight.append((acc, n))
+        self._inflight.append((acc, n, tag))
         self.stats.batches += 1
         self.stats.frames += n
         self.stats.padded_frames += len(frames) - n
 
     def _collect_one(self) -> None:
         """Fetch the oldest in-flight batch and argmax/dequant it on the
-        host — this runs while newer batches compute on device."""
-        acc, n = self._inflight.popleft()
+        host — this runs while newer batches compute on device. Tagged
+        batches go to ``on_result``; untagged accumulate for drain()."""
+        acc, n, tag = self._inflight.popleft()
         out = self.runner.dequantize(acc)[:n]
         if self.output == "top1":
             out = np.argmax(out.reshape(n, -1), axis=-1)
-        self._results.append(out)
+        if tag is not None and self.on_result is not None:
+            self.on_result(tag, out)
+        else:
+            self._results.append(out)
 
     # -- drain ---------------------------------------------------------------
 
     def drain(self) -> list[np.ndarray]:
         """Flush the partial tail (padded to the compiled batch shape so
         the jitted chain never recompiles), collect everything, and
-        return per-frame outputs in submission order."""
-        if self._pending:
-            tail = self._pending
-            self._pending = []
-            n = len(tail)
-            pad = [np.zeros_like(tail[0])] * (self.batch_size - n)
-            self._dispatch(tail + pad, n_valid=n)
-        while self._inflight:
-            self._collect_one()
-        if self._t0 is not None:
-            # Accumulate only the active window; a later submit() opens a
-            # fresh one, so host idle between drains never counts.
-            self.stats.wall_s += time.perf_counter() - self._t0
-            self._t0 = None
-        results = self._results
-        self._results = []
+        return per-frame outputs in submission order. Thread-safe."""
+        with self._lock:
+            if self._pending:
+                tail = self._pending
+                self._pending = []
+                n = len(tail)
+                pad = [np.zeros_like(tail[0])] * (self.batch_size - n)
+                self._dispatch(tail + pad, n_valid=n)
+            while self._inflight:
+                self._collect_one()
+            if self._t0 is not None:
+                # Accumulate only the active window; a later submit()
+                # opens a fresh one, so host idle between drains never
+                # counts.
+                self.stats.wall_s += time.perf_counter() - self._t0
+                self._t0 = None
+            results = self._results
+            self._results = []
         if not results:
             return []
         flat = np.concatenate(results, axis=0)

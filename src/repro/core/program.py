@@ -192,6 +192,36 @@ class EngineProgram:
         return xq.astype(jnp.float32) \
             * scale.reshape((1,) * (xq.ndim - 1) + (-1,))
 
+    def _resolve_route(self, route: str | None,
+                       steps: tuple[EngineStep, ...]) -> str:
+        """Validate a MAC-route request against ``steps`` (shared by the
+        whole-chain and stage runners so a stage cannot silently accept a
+        lowering the full chain would refuse)."""
+        if route is None:
+            route = "oracle" if self.bits > 8 else "f32"
+        if route not in ("f32", "oracle", "kernel"):
+            raise ValueError(f"unknown route {route!r}")
+        if route == "kernel":
+            require_kernel(self.bits)
+        if route == "f32" and self.bits > 8:
+            raise NotImplementedError(
+                "the exact-f32 route holds only for int8 products "
+                "(<= 2^14 per MAC); bits=16 uses route='oracle'")
+        if route == "f32":
+            # The exactness proof chunks the reduction over channels; a
+            # single (r, s) tap plane is its floor. Kernels wider than
+            # 32x32 (none in the paper's models) would overflow 2^24
+            # within one chunk — refuse rather than silently lose bits.
+            for s in steps:
+                if s.kind == "conv" and \
+                        s.layer.kernel ** 2 > _F32_CHUNK_MACS:
+                    raise NotImplementedError(
+                        f"step {s.name}: {s.layer.kernel}x"
+                        f"{s.layer.kernel} kernel exceeds the exact-f32 "
+                        f"chunk bound ({_F32_CHUNK_MACS} MACs); use "
+                        f"route='oracle'")
+        return route
+
     def compile_runner(self, *, route: str | None = None,
                        interpret: bool | None = None,
                        donate: bool | None = None) -> "CompiledRunner":
@@ -221,34 +251,34 @@ class EngineProgram:
         if self.steps is None:
             raise ValueError(
                 "plan-only program (compiled without params) cannot run")
-        if route is None:
-            route = "oracle" if self.bits > 8 else "f32"
-        if route not in ("f32", "oracle", "kernel"):
-            raise ValueError(f"unknown route {route!r}")
-        if route == "kernel":
-            require_kernel(self.bits)
-        if route == "f32" and self.bits > 8:
-            raise NotImplementedError(
-                "the exact-f32 route holds only for int8 products "
-                "(<= 2^14 per MAC); bits=16 uses route='oracle'")
-        if route == "f32":
-            # The exactness proof chunks the reduction over channels; a
-            # single (r, s) tap plane is its floor. Kernels wider than
-            # 32x32 (none in the paper's models) would overflow 2^24
-            # within one chunk — refuse rather than silently lose bits.
-            for s in self.steps:
-                if s.kind == "conv" and \
-                        s.layer.kernel ** 2 > _F32_CHUNK_MACS:
-                    raise NotImplementedError(
-                        f"step {s.name}: {s.layer.kernel}x"
-                        f"{s.layer.kernel} kernel exceeds the exact-f32 "
-                        f"chunk bound ({_F32_CHUNK_MACS} MACs); use "
-                        f"route='oracle'")
+        return self.compile_stage_runner(0, len(self.steps), route=route,
+                                         interpret=interpret, donate=donate)
+
+    def compile_stage_runner(self, start: int, stop: int, *,
+                             route: str | None = None,
+                             interpret: bool | None = None,
+                             donate: bool | None = None) -> "CompiledRunner":
+        """Jit the contiguous step range ``[start, stop)`` as one device
+        program — one *stage* of the software layer-wise pipeline
+        (``repro.serving``). Activations cross stage boundaries as the same
+        int8 (int16 for bits=16) tensors the full chain passes between
+        steps, so chaining stage runners end to end reproduces
+        :meth:`compile_runner` bit-exactly for every route (pinned by
+        ``tests/test_serving.py``). ``compile_runner`` itself is the
+        degenerate single-stage case ``[0, len(steps))``."""
+        if self.steps is None:
+            raise ValueError(
+                "plan-only program (compiled without params) cannot run")
+        if not (0 <= start < stop <= len(self.steps)):
+            raise ValueError(
+                f"stage range [{start}, {stop}) outside the "
+                f"{len(self.steps)}-step chain")
+        steps = tuple(self.steps[start:stop])
+        route = self._resolve_route(route, steps)
         if interpret is None:
             interpret = jax.devices()[0].platform != "tpu"
         if donate is None:
             donate = jax.devices()[0].platform != "cpu"
-        steps = tuple(self.steps)
         bits = self.bits
 
         def chain(xq: jnp.ndarray) -> jnp.ndarray:
@@ -265,29 +295,54 @@ class EngineProgram:
 
         fn = jax.jit(chain, donate_argnums=(0,) if donate else ())
         return CompiledRunner(program=self, route=route, donate=donate,
-                              fn=fn)
+                              fn=fn, start=start, stop=stop)
 
 
 @dataclasses.dataclass
 class CompiledRunner:
-    """One jitted device program for the whole engine chain.
+    """One jitted device program for a contiguous step range of the engine
+    chain — the whole chain for :meth:`EngineProgram.compile_runner`
+    (``start == 0``, ``stop == len(steps)``), or one pipeline stage for
+    :meth:`EngineProgram.compile_stage_runner`.
 
     ``fn`` maps an int8 (int16 for bits=16) activation batch
-    ``[B, H, W, C]`` straight to the final engine's raw accumulators —
-    weights/bias/shift schedules are captured constants, so a fixed batch
-    shape compiles exactly once (``cache_size`` is the recompile guard the
-    tests pin). Host-side quantize-in and argmax/dequant-out live here so
-    the executor can overlap them with device compute.
+    ``[B, H, W, C]`` to the range's output — raw final accumulators when
+    the range includes the last engine, int8 activations otherwise —
+    with weights/bias/shift schedules captured as constants, so a fixed
+    batch shape compiles exactly once (``cache_size`` is the recompile
+    guard the tests pin). Host-side quantize-in and argmax/dequant-out
+    live here so the executor can overlap them with device compute; they
+    exist only at the matching end of the chain (first / last stage).
     """
 
     program: EngineProgram
     route: str
     donate: bool
     fn: Callable[[jnp.ndarray], jnp.ndarray]
+    start: int = 0
+    stop: int = -1          # -1 == len(program.steps) (whole chain)
+
+    def __post_init__(self):
+        if self.stop < 0:
+            self.stop = len(self.program.steps)
+
+    @property
+    def is_first(self) -> bool:
+        return self.start == 0
+
+    @property
+    def is_last(self) -> bool:
+        return self.stop == len(self.program.steps)
 
     def quantize(self, x: np.ndarray) -> np.ndarray:
         """Host-side quantize onto the program's frozen input format
-        (numpy twin of ``quant.quantize_to_exponent`` — bit-identical)."""
+        (numpy twin of ``quant.quantize_to_exponent`` — bit-identical).
+        Only the first stage consumes float frames."""
+        if not self.is_first:
+            raise ValueError(
+                f"stage [{self.start}, {self.stop}) does not start the "
+                f"chain; it consumes the previous stage's quantized "
+                f"activations, not float frames")
         return quant.quantize_to_exponent_np(
             x, self.program.e_input, self.program.bits)
 
@@ -303,7 +358,12 @@ class CompiledRunner:
 
     def dequantize(self, acc) -> np.ndarray:
         """Raw final accumulators -> float32 logits on their exact po2
-        scale (host side)."""
+        scale (host side). Only the last stage emits accumulators."""
+        if not self.is_last:
+            raise ValueError(
+                f"stage [{self.start}, {self.stop}) does not end the "
+                f"chain; it emits quantized activations, not final "
+                f"accumulators")
         acc = np.asarray(acc)
         scale = self.program.out_scale()
         return acc.astype(np.float32) * scale.reshape(
@@ -501,6 +561,7 @@ def compile_model(model: CNNModel, params: Params | None = None, *,
                   bram_total: int | None = DEFAULT_BRAM,
                   bandwidth_bytes: float = DEFAULT_BW,
                   freq_hz: float = DEFAULT_FREQ,
+                  bram_weights: bool = False,
                   objective: str = "optimal") -> EngineProgram:
     """Workload -> allocation -> execution, compiled once.
 
@@ -508,14 +569,16 @@ def compile_model(model: CNNModel, params: Params | None = None, *,
     only) for the simulator and benchmarks. With ``params`` (and a
     ``calib_batch`` for activation ranges) the program is fully lowered and
     runnable. ``bram_total=None`` skips Algorithm 2 (compute allocation
-    only, all K=1).
+    only, all K=1). ``bram_weights=True`` makes Algorithm 2 charge weight
+    buffers against the BRAM budget and pin hot weight sets on-chip (the
+    Table I BRAM-column model; plan-only analytics, never the arithmetic).
     """
     workloads = model.layer_workloads(weight_bits=bits)
     allocs = allocate_compute(workloads, theta, objective=objective)
     if bram_total is not None:
         allocate_buffers(allocs, bram_total=bram_total,
                          bandwidth_bytes=bandwidth_bytes, freq_hz=freq_hz,
-                         act_bytes=bits // 8)
+                         act_bytes=bits // 8, weights=bram_weights)
     prog = EngineProgram(model=model, bits=bits, theta_total=theta,
                          allocs=allocs, freq_hz=freq_hz)
     if params is None:

@@ -1,19 +1,25 @@
 """CNN serving launcher: stream frames through a compiled EngineProgram.
 
-Serves any of the four paper models (vgg16 / alexnet / zf / yolo) from a
-single jitted step chain via :class:`repro.core.executor.EngineExecutor`
-and reports measured steady-state FPS next to the Algorithm-1 predicted
-FPS of the same plan (the paper's modeled pipeline throughput on the
-ZC706-class budget).
+Serves any of the four paper models (vgg16 / alexnet / zf / yolo) either
+from a single jitted step chain (:class:`repro.core.executor
+.EngineExecutor`) or through the stage-pipelined serving subsystem
+(``--stages K``: :class:`repro.serving.PipelineExecutor` + the async
+:class:`repro.serving.AsyncFrontend`), reporting measured steady-state
+FPS next to the Algorithm-1 predicted FPS of the same plan (the paper's
+modeled pipeline throughput on the ZC706-class budget) — plus request
+latency percentiles for the async path.
 
-Example (CPU):
+Examples (CPU):
   PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
       --frames 64 --batch 16
+  PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
+      --frames 64 --batch 16 --stages 2 --max-wait-ms 10
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -23,6 +29,36 @@ from repro.core import workload as W
 from repro.core.executor import EngineExecutor
 from repro.core.program import compile_model
 from repro.models import cnn
+
+
+def compile_for_serving(model_name: str, *, bits: int = 8, seed: int = 0,
+                        theta: int | None = None):
+    """Compile ``model_name`` exactly as the serve paths consume it:
+    seeded params, seeded calibration batch, Table I's budget convention
+    for the bit width (the plan only affects modeled numbers — never the
+    executed arithmetic)."""
+    m = W.CNN_MODELS[model_name]()
+    params = cnn.init_params(m, jax.random.PRNGKey(seed))
+    calib = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (1, m.input_hw, m.input_hw,
+                                       m.input_ch))
+    # 8-bit double-pumps the 900 DSPs, so modeled_fps_alg1 here equals
+    # the fps8/fps16 column in benchmarks/table1.py.
+    if theta is None:
+        theta = 2 * 900 - len(m.layers) if bits == 8 else 900
+    kwargs = {"theta": theta,
+              "bram_total": None if bits == 8 else 545}
+    return compile_model(m, params, bits=bits, calib_batch=calib, **kwargs)
+
+
+def synthetic_stream(model_name: str, frames: int,
+                     seed: int = 0) -> np.ndarray:
+    """The seeded synthetic frame stream every serve/bench entry point
+    shares (explicit RNG: identical frames run to run)."""
+    m = W.CNN_MODELS[model_name]()
+    rng = np.random.default_rng(seed + 2)
+    return rng.standard_normal(
+        (frames, m.input_hw, m.input_hw, m.input_ch), dtype=np.float32)
 
 
 def serve(model_name: str, *, frames: int = 64, batch: int = 16,
@@ -38,24 +74,8 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
             f"the first micro-batch, which is charged to compile/warmup, "
             f"leaving no steady-state window to measure (steady_fps would "
             f"be 0). Use frames >= 2*batch.")
-    m = W.CNN_MODELS[model_name]()
-    params = cnn.init_params(m, jax.random.PRNGKey(seed))
-    calib = jax.random.normal(
-        jax.random.PRNGKey(seed + 1), (1, m.input_hw, m.input_hw,
-                                       m.input_ch))
-    # The plan only affects the modeled numbers, never the executed
-    # arithmetic — use Table I's budget convention for the bit width
-    # (8-bit double-pumps the 900 DSPs) so modeled_fps_alg1 here equals
-    # the fps8/fps16 column in benchmarks/table1.py.
-    if theta is None:
-        theta = 2 * 900 - len(m.layers) if bits == 8 else 900
-    kwargs = {"theta": theta,
-              "bram_total": None if bits == 8 else 545}
-    prog = compile_model(m, params, bits=bits, calib_batch=calib, **kwargs)
-
-    rng = np.random.default_rng(seed + 2)
-    stream = rng.standard_normal(
-        (frames, m.input_hw, m.input_hw, m.input_ch), dtype=np.float32)
+    prog = compile_for_serving(model_name, bits=bits, seed=seed, theta=theta)
+    stream = synthetic_stream(model_name, frames, seed)
 
     ex = EngineExecutor(prog, batch_size=batch, route=route, output=output)
     outs = ex.serve(stream)
@@ -105,6 +125,124 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
     return result
 
 
+def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
+                stages: int = 2, bits: int = 8, route: str | None = None,
+                seed: int = 0, theta: int | None = None,
+                max_wait_ms: float | None = None,
+                arrival_fps: float | None = None,
+                output: str = "top1", program=None,
+                verbose: bool = True) -> dict:
+    """Serve ``frames`` synthetic frames through the K-stage pipelined
+    subsystem (``repro.serving``) behind the async request frontend.
+
+    Two measurement phases over one compiled pipeline:
+
+    1. **throughput** — after a warmup batch compiles every stage jit
+       (stats reset so the window is pure steady state), a closed-loop
+       stream straight into the :class:`PipelineExecutor` (saturating,
+       no frontend) measures steady-state FPS, the number the single-jit
+       path's ``measured_steady_fps`` is compared against;
+    2. **latency** — the :class:`AsyncFrontend` replays the stream as an
+       open-loop arrival process at ``arrival_fps`` (default: 70% of the
+       measured throughput) and records per-request p50/p95/p99.
+       ``max_wait_ms`` defaults to one full-batch assembly window at the
+       arrival rate (``batch / arrival_fps``), so the dynamic batcher
+       neither thrashes on padded 1-frame batches nor parks lone frames.
+
+    Pass ``program`` to reuse an already-compiled program (the bench
+    sweeps stage counts over one compile).
+    """
+    from repro.serving import AsyncFrontend, PipelineExecutor
+
+    if frames <= batch:
+        raise ValueError(f"frames={frames} <= batch={batch}: no "
+                         f"steady-state window (use frames >= 2*batch)")
+    prog = program if program is not None else compile_for_serving(
+        model_name, bits=bits, seed=seed, theta=theta)
+    stream = synthetic_stream(model_name, frames, seed)
+
+    px = PipelineExecutor(prog, stages=stages, batch_size=batch,
+                          route=route, output=output)
+    part = px.partition
+    with px:
+        # Warmup: one micro-batch through all K stages compiles every
+        # stage jit. Resetting afterwards makes the measured window pure
+        # steady state — without this, batches queued during the cold
+        # compiles flood out the moment the pipeline opens and a short
+        # stream reads an absurd fps.
+        t0 = time.perf_counter()
+        px.serve(list(stream[:batch]))
+        warmup_s = time.perf_counter() - t0
+        px.reset_stats()
+
+        # Phase 1: closed-loop throughput (hot jits, every frame counts).
+        px.serve(list(stream))
+        # Snapshot before phase 2 keeps these counts describing exactly
+        # the window steady_fps was measured over (the frontend phase
+        # keeps accumulating into px.stats).
+        ph1 = dataclasses.replace(px.stats)
+        steady = ph1.steady_fps
+
+        # Phase 2: open-loop latency at a sustainable arrival rate.
+        rate = arrival_fps if arrival_fps is not None else 0.7 * steady
+        if max_wait_ms is None:
+            # One full batch assembles in batch/rate seconds; waiting any
+            # less flushes padded partial batches faster than the
+            # pipeline drains them (service rate collapses), any more
+            # only parks the first frame of a quiet period.
+            max_wait_ms = 1e3 * batch / rate if rate > 0 else 50.0
+        fe = AsyncFrontend(px, max_wait_ms=max_wait_ms)
+        period = 1.0 / rate if rate > 0 else 0.0
+        t_next = time.perf_counter()
+        reqs = []
+        for f in stream:
+            if period:
+                delay = t_next - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+                t_next += period
+            reqs.append(fe.submit(f))
+        for r in reqs:
+            r.result(timeout=600)
+        fe.close()
+
+    lat = fe.stats.latency_percentiles()
+    result = {
+        "model": model_name,
+        "bits": bits,
+        "route": px.route,
+        "batch": batch,
+        "stages": part.n_stages,
+        "boundaries": list(part.boundaries),
+        "stage_cycles": [round(c, 1) for c in part.stage_cycles],
+        "stage_balance": round(part.balance, 4),
+        "frames": ph1.frames,
+        "batches": ph1.batches,
+        "padded_frames": ph1.padded_frames,
+        "compile_plus_warmup_s": round(warmup_s, 3),
+        "measured_steady_fps": round(steady, 3),
+        "modeled_fps_alg1": round(prog.fps(), 3),
+        "arrival_fps": round(rate, 3),
+        "client_fps": round(fe.stats.fps, 3),
+        "max_wait_ms": round(max_wait_ms, 3),
+        "flushes_full": fe.stats.flushes_full,
+        "flushes_timeout": fe.stats.flushes_timeout,
+        "latency_ms_p50": round(lat["p50"] * 1e3, 3),
+        "latency_ms_p95": round(lat["p95"] * 1e3, 3),
+        "latency_ms_p99": round(lat["p99"] * 1e3, 3),
+        "latency_ms_mean": round(lat["mean"] * 1e3, 3),
+    }
+    if verbose:
+        print(f"[serve_async] {model_name} K={part.n_stages} "
+              f"batch={batch}: steady {steady:.2f} fps (balance "
+              f"{part.balance:.2f}), arrival {rate:.1f} fps -> p50 "
+              f"{result['latency_ms_p50']:.1f}ms p95 "
+              f"{result['latency_ms_p95']:.1f}ms p99 "
+              f"{result['latency_ms_p99']:.1f}ms | modeled "
+              f"{result['modeled_fps_alg1']:.1f} fps")
+    return result
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="alexnet",
@@ -119,14 +257,33 @@ def main(argv=None) -> int:
                     help="also time N frames through the eager loop")
     ap.add_argument("--output", default="top1",
                     choices=("top1", "logits"))
+    ap.add_argument("--stages", type=int, default=0,
+                    help="serve through the K-stage pipelined subsystem "
+                         "with the async frontend (0 = single-jit path)")
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="dynamic batcher flush timeout (async path; "
+                         "default: one full-batch window at the arrival "
+                         "rate)")
+    ap.add_argument("--arrival-fps", type=float, default=None,
+                    help="open-loop request rate (default: 70%% of the "
+                         "measured pipeline throughput)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="params/calibration/stream RNG seed")
     ap.add_argument("--quick", action="store_true",
                     help="small smoke setting (8 frames, batch 4)")
     args = ap.parse_args(argv)
     if args.quick:
         args.frames, args.batch = 8, 4
-    serve(args.model, frames=args.frames, batch=args.batch, bits=args.bits,
-          route=args.route, eager_frames=args.eager_frames,
-          output=args.output)
+    if args.stages > 0:
+        serve_async(args.model, frames=args.frames, batch=args.batch,
+                    stages=args.stages, bits=args.bits, route=args.route,
+                    max_wait_ms=args.max_wait_ms,
+                    arrival_fps=args.arrival_fps, output=args.output,
+                    seed=args.seed)
+    else:
+        serve(args.model, frames=args.frames, batch=args.batch,
+              bits=args.bits, route=args.route, seed=args.seed,
+              eager_frames=args.eager_frames, output=args.output)
     return 0
 
 

@@ -1,0 +1,28 @@
+"""Stage-pipelined async serving subsystem.
+
+The software embodiment of the paper's layer-wise pipeline: Algorithm 1's
+balance objective splits a compiled :class:`~repro.core.program
+.EngineProgram` into K stages of near-equal modeled cycles
+(:mod:`~repro.serving.partition`), one worker thread per stage executes
+its jitted step range with depth-2 bounded queues between stages — the
+activation double-buffer analogue (:mod:`~repro.serving
+.pipeline_executor`) — and an async request frontend batches live traffic
+into the pipeline with backpressure and per-request latency accounting
+(:mod:`~repro.serving.frontend`).
+"""
+
+from repro.serving.frontend import (AsyncFrontend, FrontendStats,
+                                    ServedRequest)
+from repro.serving.partition import (StagePartition, partition_program,
+                                     step_cycles)
+from repro.serving.pipeline_executor import PipelineExecutor
+
+__all__ = [
+    "AsyncFrontend",
+    "FrontendStats",
+    "PipelineExecutor",
+    "ServedRequest",
+    "StagePartition",
+    "partition_program",
+    "step_cycles",
+]

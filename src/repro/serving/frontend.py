@@ -1,0 +1,299 @@
+"""Async request frontend: submission queue, dynamic batcher, latency SLOs.
+
+Non-synthetic traffic arrives one frame at a time, at arbitrary rates;
+the engines underneath want fixed-shape micro-batches. The frontend
+bridges the two (the ROADMAP's "real async frontend (queue + worker
+thread)"):
+
+* :meth:`AsyncFrontend.submit` enqueues a request into a *bounded*
+  submission queue and returns a :class:`ServedRequest` handle
+  immediately. A full queue blocks the caller (backpressure — the same
+  stall a full activation buffer exerts on the paper's producer engine)
+  or raises :class:`queue.Full` when ``timeout`` expires.
+* a batcher thread assembles micro-batches dynamically: a batch is
+  flushed when it reaches ``batch_size`` frames **or** the oldest queued
+  request has waited ``max_wait_ms`` — so a lone frame never waits for a
+  full batch, and a saturating stream never pays the timeout.
+* completed micro-batches come back through the executor's ``on_result``
+  hook; per-request latency (submit -> result) is recorded for the
+  p50/p95/p99 figures :class:`FrontendStats` reports.
+
+The executor can be a :class:`~repro.serving.pipeline_executor
+.PipelineExecutor` (K-stage pipeline) or a thread-safe
+:class:`~repro.core.executor.EngineExecutor` (single jit) — anything with
+``batch_size``, ``submit_batch(frames, n_valid, tag)`` and an
+``on_result`` callback slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+
+class ServedRequest:
+    """Handle for one in-flight frame: ``result()`` blocks until the
+    pipeline answers (re-raising the serving error if its batch failed);
+    ``latency_s`` is submit -> result wall time."""
+
+    __slots__ = ("t_submit", "t_done", "_value", "_error", "_event")
+
+    def __init__(self):
+        self.t_submit = time.perf_counter()
+        self.t_done: float | None = None
+        self._value: np.ndarray | None = None
+        self._error: BaseException | None = None
+        self._event = threading.Event()
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self.t_done = time.perf_counter()
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self.t_done = time.perf_counter()
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise RuntimeError("request failed in the serving "
+                               "pipeline") from self._error
+        return self._value
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Per-request accounting over one frontend lifetime."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0              # requests resolved with an error
+    batches: int = 0
+    flushes_full: int = 0        # batches flushed at batch_size
+    flushes_timeout: int = 0     # batches flushed by max_wait_ms
+    latencies_s: list = dataclasses.field(default_factory=list)
+    _t_first: float | None = None
+    _t_last: float | None = None
+
+    def latency_percentiles(self) -> dict[str, float]:
+        """{'p50','p95','p99','mean'} request latency in seconds (NaN
+        when nothing completed yet)."""
+        if not self.latencies_s:
+            nan = float("nan")
+            return {"p50": nan, "p95": nan, "p99": nan, "mean": nan}
+        lat = np.asarray(self.latencies_s)
+        p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+        return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+                "mean": float(lat.mean())}
+
+    @property
+    def fps(self) -> float:
+        """Completed requests per second over the first-submit ->
+        last-result window (includes compile/fill — the client-observed
+        rate, unlike the executor's steady_fps)."""
+        if self._t_first is None or self._t_last is None:
+            return 0.0
+        dt = self._t_last - self._t_first
+        return self.completed / dt if dt > 0 else 0.0
+
+
+class AsyncFrontend:
+    """Dynamic-batching request frontend over a serving executor.
+
+    >>> with PipelineExecutor(prog, stages=2, batch_size=8) as px:
+    ...     fe = AsyncFrontend(px, max_wait_ms=5.0)
+    ...     reqs = [fe.submit(f) for f in frames]
+    ...     ids = [r.result() for r in reqs]
+    ...     fe.close()
+    """
+
+    def __init__(self, executor, *, max_wait_ms: float = 5.0,
+                 max_queue: int = 256):
+        if getattr(executor, "on_result", None) is not None:
+            raise ValueError("executor already has an on_result consumer")
+        self.executor = executor
+        self.batch_size = int(executor.batch_size)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.stats = FrontendStats()
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, int(max_queue)))
+        self._closing = threading.Event()
+        self._lock = threading.Lock()
+        # Makes the closing-check + enqueue in submit() atomic against
+        # close(), so no request can slip into the queue after close()'s
+        # straggler drain. Separate from _lock: the holder may block on
+        # a full submission queue while the batcher (which only needs
+        # _lock for stats) drains it.
+        self._submit_lock = threading.Lock()
+        executor.on_result = self._on_result
+        if hasattr(executor, "on_error"):
+            # Pipelined executors report stage failures asynchronously;
+            # the single-jit executor raises from submit_batch instead
+            # (handled in _dispatch).
+            executor.on_error = self._on_error
+        self._batcher = threading.Thread(target=self._run,
+                                         name="frontend-batcher", daemon=True)
+        self._batcher.start()
+
+    # -- client side ---------------------------------------------------------
+
+    def submit(self, frame: np.ndarray,
+               timeout: float | None = None) -> ServedRequest:
+        """Enqueue one float frame ``[H, W, C]``. Blocks while the
+        submission queue is full (backpressure); raises ``queue.Full``
+        when ``timeout`` (seconds) expires first, ``ValueError`` on a
+        frame the compiled program cannot take, and ``RuntimeError``
+        after :meth:`close`."""
+        if self._closing.is_set():
+            raise RuntimeError("frontend is closed")
+        req_frame = np.asarray(frame)
+        # Reject malformed frames at the client, not inside the batcher
+        # thread where one bad frame would poison a whole micro-batch.
+        prog = getattr(self.executor, "program", None)
+        if prog is not None:
+            hw = prog.model.input_hw
+            want = (hw, hw, prog.model.input_ch)
+            if req_frame.shape != want:
+                raise ValueError(f"frame shape {req_frame.shape} does not "
+                                 f"match the compiled program {want}")
+        req = ServedRequest()
+        with self._submit_lock:
+            if self._closing.is_set():
+                raise RuntimeError("frontend is closed")
+            self._q.put((req, req_frame), timeout=timeout)
+            with self._lock:
+                self.stats.submitted += 1
+                if self.stats._t_first is None:
+                    self.stats._t_first = req.t_submit
+        return req
+
+    def close(self) -> None:
+        """Stop accepting requests, flush everything queued, and wait for
+        every in-flight request to complete."""
+        with self._submit_lock:
+            if self._closing.is_set():
+                return
+            self._closing.set()
+        self._batcher.join()
+        # A submit() racing close() may have enqueued after the batcher's
+        # final empty poll — flush any stragglers here so no request is
+        # ever silently dropped.
+        leftover = []
+        while True:
+            try:
+                leftover.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        for i in range(0, len(leftover), self.batch_size):
+            self._dispatch(leftover[i:i + self.batch_size], False)
+        # Everything is dispatched; make sure trailing micro-batches are
+        # collected (PipelineExecutor's collector runs continuously, the
+        # single-jit EngineExecutor collects on flush).
+        flush = getattr(self.executor, "flush_inflight", None)
+        if flush is not None:
+            flush()
+        deadline = time.perf_counter() + 60.0
+        while True:
+            with self._lock:
+                done = self.stats.completed + self.stats.failed
+                if done >= self.stats.submitted:
+                    break
+            if time.perf_counter() > deadline:
+                raise TimeoutError("in-flight requests did not complete")
+            time.sleep(0.001)
+        # Release the executor for a future frontend (it is documented
+        # as reusable across drains) and drop the cross-reference.
+        self.executor.on_result = None
+        if hasattr(self.executor, "on_error"):
+            self.executor.on_error = None
+
+    def __enter__(self) -> "AsyncFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- batcher -------------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            try:
+                first = self._q.get(timeout=0.01)
+            except queue.Empty:
+                if self._closing.is_set():
+                    return
+                # Idle: collect finished micro-batches the single-jit
+                # executor is holding (no-op for the pipeline, whose
+                # collector thread is always live).
+                flush = getattr(self.executor, "flush_inflight", None)
+                if flush is not None:
+                    flush()
+                continue
+            batch = [first]
+            deadline = first[0].t_submit + self.max_wait_s
+            timed_out = False
+            while len(batch) < self.batch_size:
+                if self._closing.is_set():
+                    break
+                now = time.perf_counter()
+                if now >= deadline:
+                    timed_out = True
+                    break
+                try:
+                    batch.append(self._q.get(
+                        timeout=min(deadline - now, 0.05)))
+                except queue.Empty:
+                    continue
+            self._dispatch(batch, timed_out)
+
+    def _dispatch(self, batch, timed_out: bool) -> None:
+        """Hand one assembled micro-batch to the executor. A dispatch
+        failure (e.g. the pipeline died) resolves this batch's requests
+        with the error instead of killing the batcher thread — later
+        requests still get answers (more errors, most likely), and
+        close() still converges."""
+        reqs = tuple(r for r, _ in batch)
+        with self._lock:
+            self.stats.batches += 1
+            if len(batch) >= self.batch_size:
+                self.stats.flushes_full += 1
+            elif timed_out:
+                self.stats.flushes_timeout += 1
+        try:
+            frames = np.stack([f for _, f in batch])
+            self.executor.submit_batch(frames, len(frames), tag=reqs)
+        except BaseException as e:  # noqa: BLE001 - resolved per request
+            with self._lock:
+                self.stats.failed += len(reqs)
+            for r in reqs:
+                r._fail(e)
+
+    # -- completion (runs on the executor's collector thread) ----------------
+
+    def _on_result(self, tag, outputs) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            for i, req in enumerate(tag):
+                req._resolve(outputs[i])
+                self.stats.completed += 1
+                self.stats.latencies_s.append(now - req.t_submit)
+            self.stats._t_last = now
+
+    def _on_error(self, tag, exc: BaseException) -> None:
+        with self._lock:
+            self.stats.failed += len(tag)
+        for req in tag:
+            req._fail(exc)

@@ -1,0 +1,345 @@
+"""Stage-pipelined executor: one worker thread per stage, bounded queues.
+
+The paper's engines run concurrently, exchanging row groups through
+double-buffered activation memories: engine i computes row group n while
+engine i+1 consumes row group n-1 (Fig. 2). :class:`PipelineExecutor` is
+the same structure at micro-batch granularity:
+
+* the step chain is split into K contiguous stages with near-equal
+  modeled cycles (:func:`repro.serving.partition.partition_program` —
+  Algorithm 1's balance objective);
+* each stage is one jitted device program
+  (:meth:`EngineProgram.compile_stage_runner`) driven by its own worker
+  thread;
+* stages are connected by depth-2 :class:`queue.Queue`\\ s — the two
+  halves of the activation double buffer. A full queue stalls the
+  producer stage exactly like a full activation buffer stalls the
+  upstream engine (backpressure), so at most ``queue_depth`` micro-batches
+  sit between any two stages.
+
+Activations cross stage boundaries as the same int8 tensors the
+monolithic jit passes between steps, so the K-stage pipeline is
+bit-identical to :meth:`EngineProgram.compile_runner` for every route
+(pinned by ``tests/test_serving.py``); K=1 degenerates to the single-jit
+serve path with one worker.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.executor import (ServeStats, normalize_frames,
+                                 pad_micro_batch)
+from repro.core.program import CompiledRunner, EngineProgram
+from repro.serving.partition import (partition_from_boundaries,
+                                     partition_program)
+
+# Inter-stage queue depth: two mirrors the paper's double-buffered
+# activation memory (one micro-batch in flight, one staged).
+DEFAULT_QUEUE_DEPTH = 2
+
+_SENTINEL = ("stop", 0, None, None, 0)
+
+
+class PipelineExecutor:
+    """Serve a frame stream through a K-stage software pipeline.
+
+    >>> px = PipelineExecutor(program, stages=2, batch_size=32)
+    >>> for frame in frames:
+    ...     px.submit(frame)            # [H, W, C] float
+    >>> ids = px.drain()                # per-frame top-1 class ids
+    >>> px.close()
+
+    ``on_result`` (for the async frontend) is called from the collector
+    thread with ``(tag, outputs)`` for every micro-batch submitted with a
+    non-None tag; ``on_error`` with ``(tag, exception)`` when such a
+    batch fails in a stage. Untagged batches accumulate for
+    :meth:`drain`.
+    """
+
+    def __init__(self, program: EngineProgram, *, stages: int = 2,
+                 batch_size: int = 32, boundaries: Sequence[int] | None = None,
+                 route: str | None = None, interpret: bool | None = None,
+                 donate: bool | None = None, output: str = "top1",
+                 queue_depth: int = DEFAULT_QUEUE_DEPTH,
+                 on_result: Callable[[object, np.ndarray], None] | None = None,
+                 on_error: Callable[[object, BaseException], None] | None = None):
+        if output not in ("top1", "logits"):
+            raise ValueError(f"unknown output {output!r}")
+        self.program = program
+        self.batch_size = int(batch_size)
+        self.output = output
+        self.on_result = on_result
+        self.on_error = on_error
+        if boundaries is not None:
+            if len(tuple(boundaries)) != stages + 1:
+                raise ValueError(
+                    f"boundaries {tuple(boundaries)} is not a {stages}-"
+                    f"stage contiguous cover of [0, {len(program.steps)})")
+            self.partition = partition_from_boundaries(program, boundaries)
+        else:
+            self.partition = partition_program(program, stages)
+        self.runners: list[CompiledRunner] = [
+            program.compile_stage_runner(b, e, route=route,
+                                         interpret=interpret, donate=donate)
+            for b, e in self.partition.stage_ranges()]
+        self.route = self.runners[0].route
+        self.stats = ServeStats()
+        self.stats._first_n = self.batch_size
+        self.stage_busy_s = [0.0] * self.partition.n_stages
+
+        depth = max(1, int(queue_depth))
+        # queues[i] feeds stage i; queues[K] feeds the collector.
+        self._queues = [queue.Queue(maxsize=depth)
+                        for _ in range(self.partition.n_stages + 1)]
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.RLock()
+        # Serializes batch assembly + seq assignment + stage-0 enqueue as
+        # one step so concurrent producers cannot interleave out of
+        # order, and so close() cannot slip its stop sentinel past a
+        # producer blocked on a full queue. Separate from _lock: the
+        # holder may block on a full queue, and the collector needs
+        # _lock to drain it. Re-entrant: submit() holds it across the
+        # pending-buffer flush while submit_batch re-acquires.
+        self._order_lock = threading.RLock()
+        self._done = threading.Condition(self._lock)
+        self._pending: list[np.ndarray] = []
+        self._results: list[np.ndarray] = []
+        self._submitted = 0
+        self._collected = 0
+        self._error: BaseException | None = None
+        self._closed = False
+        self._t0: float | None = None
+        self._first_t0: float | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> None:
+        """Spawn the K stage workers and the collector (idempotent;
+        :meth:`submit` calls this lazily on first use)."""
+        if self._threads:
+            return
+        if self._closed:
+            raise RuntimeError("PipelineExecutor is closed")
+        for i in range(self.partition.n_stages):
+            t = threading.Thread(target=self._stage_worker, args=(i,),
+                                 name=f"pipeline-stage-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        t = threading.Thread(target=self._collector,
+                             name="pipeline-collector", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def close(self) -> None:
+        """Stop all workers (waits for in-flight batches to finish).
+        Taking the order lock first means no producer is mid-enqueue, so
+        the stop sentinel can never overtake a submitted batch into a
+        dead queue."""
+        if self._closed:
+            return
+        with self._order_lock:
+            self._closed = True
+            if self._threads:
+                self._queues[0].put(_SENTINEL)
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def __enter__(self) -> "PipelineExecutor":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- intake --------------------------------------------------------------
+
+    def submit(self, frame: np.ndarray) -> None:
+        """Queue one float frame ``[H, W, C]`` (or a pre-batched
+        ``[N, H, W, C]`` chunk); dispatches whenever ``batch_size`` frames
+        are buffered. Thread-safe."""
+        frames = normalize_frames(self.program, frame)
+        # Buffer-flush and dispatch happen under one order-lock hold, or
+        # a second producer could assemble and enqueue a later batch
+        # between this one's assembly and its enqueue.
+        with self._order_lock:
+            full: list[np.ndarray] = []
+            with self._lock:
+                for f in frames:
+                    self._pending.append(f)
+                    if len(self._pending) >= self.batch_size:
+                        full.append(np.stack(self._pending[:self.batch_size]))
+                        self._pending = self._pending[self.batch_size:]
+            for batch in full:
+                self.submit_batch(batch, len(batch))
+
+    def submit_batch(self, frames: np.ndarray, n_valid: int,
+                     tag: object = None) -> None:
+        """Dispatch one float micro-batch ``[B, H, W, C]`` (padded with
+        zero frames to the compiled batch size if short). Quantizes on the
+        calling thread — the host half of the stage-0 double buffer — and
+        blocks when the stage-0 queue is full (backpressure)."""
+        self._check_error()
+        self.start()
+        frames = pad_micro_batch(self.program, frames, self.batch_size)
+        xq = self.runners[0].quantize(frames)
+        # seq assignment and the stage-0 enqueue must be one atomic step,
+        # or two producers could enter the FIFO out of submission order
+        # (and a close() racing a blocked producer could slot its stop
+        # sentinel ahead of this batch).
+        with self._order_lock:
+            if self._closed:
+                raise RuntimeError("PipelineExecutor is closed")
+            with self._lock:
+                if self._t0 is None:
+                    self._t0 = time.perf_counter()
+                if self._first_t0 is None:
+                    self._first_t0 = time.perf_counter()
+                seq = self._submitted
+                self._submitted += 1
+                self.stats.batches += 1
+                self.stats.frames += n_valid
+                self.stats.padded_frames += len(frames) - n_valid
+            self._put(self._queues[0], ("batch", seq, tag, xq, n_valid))
+
+    def serve(self, frames: Iterable[np.ndarray]) -> list[np.ndarray]:
+        """Convenience: submit a finite stream and drain."""
+        for f in frames:
+            self.submit(f)
+        return self.drain()
+
+    def reset_stats(self) -> None:
+        """Zero the serve statistics (after a warmup pass, so a measured
+        window starts with hot jits and counts every frame: fresh stats
+        have ``_first_n = 0`` — no first-batch exclusion needed once
+        nothing compiles). Call between drains, not mid-stream."""
+        with self._lock:
+            if self._collected < self._submitted or self._pending:
+                raise RuntimeError("reset_stats with work in flight")
+            self.stats = ServeStats()
+            self.stage_busy_s = [0.0] * self.partition.n_stages
+            self._t0 = None
+
+    # -- drain ---------------------------------------------------------------
+
+    def drain(self) -> list[np.ndarray]:
+        """Flush the partial tail, wait for every in-flight micro-batch to
+        clear all K stages, and return per-frame outputs of untagged
+        batches in submission order. Workers stay alive for reuse."""
+        with self._lock:
+            tail = self._pending
+            self._pending = []
+        if tail:
+            self.submit_batch(np.stack(tail), len(tail))
+        with self._done:
+            while self._collected < self._submitted and self._error is None:
+                self._done.wait(timeout=0.1)
+        self._check_error()
+        with self._lock:
+            if self._t0 is not None:
+                # Active serving window only (idle between drains excluded).
+                self.stats.wall_s += time.perf_counter() - self._t0
+                self._t0 = None
+            results = self._results
+            self._results = []
+        if not results:
+            return []
+        flat = np.concatenate(results, axis=0)
+        return list(flat)
+
+    # -- workers -------------------------------------------------------------
+
+    def _put(self, q: queue.Queue, item) -> None:
+        while True:
+            self._check_error()
+            try:
+                q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError(
+                "pipeline worker failed; no further batches can be "
+                "served") from self._error
+
+    def _fail(self, exc: BaseException) -> None:
+        with self._done:
+            if self._error is None:
+                self._error = exc
+            self._done.notify_all()
+
+    def _stage_worker(self, i: int) -> None:
+        """Run stage i: pull a micro-batch, execute the stage's jitted
+        range, hand the int8 boundary activations (or final accumulators)
+        to the next queue. FIFO queues + one thread per stage preserve
+        submission order end to end."""
+        runner = self.runners[i]
+        q_in, q_out = self._queues[i], self._queues[i + 1]
+        while True:
+            item = q_in.get()
+            if item[0] == "stop":
+                q_out.put(item)
+                return
+            kind, seq, tag, payload, n_valid = item
+            if kind == "batch":
+                try:
+                    t0 = time.perf_counter()
+                    out = runner(payload)
+                    out.block_until_ready()
+                    self.stage_busy_s[i] += time.perf_counter() - t0
+                    item = ("batch", seq, tag, out, n_valid)
+                except BaseException as e:  # noqa: BLE001 - forwarded
+                    self._fail(e)
+                    item = ("err", seq, tag, e, n_valid)
+            q_out.put(item)
+
+    def _collector(self) -> None:
+        """Final stage: dequantize/argmax on the host (overlapping the
+        device stages), deliver results, account completion."""
+        runner = self.runners[-1]
+        q = self._queues[-1]
+        while True:
+            item = q.get()
+            if item[0] == "stop":
+                return
+            kind, seq, tag, payload, n_valid = item
+            out = None
+            if kind == "batch":
+                try:
+                    out = runner.dequantize(payload)[:n_valid]
+                    if self.output == "top1":
+                        out = np.argmax(out.reshape(n_valid, -1), axis=-1)
+                except BaseException as e:  # noqa: BLE001 - recorded
+                    self._fail(e)
+                    kind, payload = "err", e
+            with self._done:
+                if self._collected == 0 and self._first_t0 is not None:
+                    # First micro-batch traverses K cold jits serially —
+                    # pipeline fill + compile, charged apart from steady
+                    # state exactly like EngineExecutor's first batch.
+                    self.stats.first_batch_s = (time.perf_counter()
+                                                - self._first_t0)
+                self._collected += 1
+                if kind == "batch":
+                    if tag is None:
+                        self._results.append(out)
+                self._done.notify_all()
+            if tag is not None:
+                try:
+                    if kind == "batch" and self.on_result:
+                        self.on_result(tag, out)
+                    elif kind == "err" and self.on_error:
+                        # A failed tagged batch must still answer its
+                        # requests — deliver the stage error instead of
+                        # leaving the futures hanging.
+                        self.on_error(tag, payload)
+                except BaseException as e:  # noqa: BLE001 - recorded
+                    self._fail(e)
