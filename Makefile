@@ -1,13 +1,20 @@
 PYTHON ?= python
 
-# Tier-1 verify (ROADMAP.md): the full suite on CPU.
+# Tier-1 verify (ROADMAP.md): the full suite on CPU. Stress-marked
+# tests (tests/test_serving_stress.py) run in their own lane below —
+# deterministic, but thread-heavy enough to keep out of the -x gate.
 .PHONY: test
 test:
-	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q -m "not stress"
 
 .PHONY: test-fast
 test-fast:
-	PYTHONPATH=src $(PYTHON) -m pytest -x -q -m "not slow"
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q -m "not slow and not stress"
+
+# Multi-producer stress lane (8 submitter threads x 64 frames etc.).
+.PHONY: test-stress
+test-stress:
+	PYTHONPATH=src $(PYTHON) -m pytest -q -m stress
 
 .PHONY: bench
 bench:
@@ -18,14 +25,21 @@ bench:
 bench-quick:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_bench.py --quick --out BENCH_serve.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --quick --out BENCH_serve_async.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --quick --out BENCH_serve_qos.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
-	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve.json BENCH_serve_async.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json
 
 # Full async serving sweep (all four models, K in {1,2,4}, batch 32).
 .PHONY: bench-async
 bench-async:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --out BENCH_serve_async.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_async.json
+
+# Full QoS sweep (mixed traffic classes at 0.6x / 1.2x load).
+.PHONY: bench-qos
+bench-qos:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --out BENCH_serve_qos.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_qos.json
 
 .PHONY: lint
 lint:

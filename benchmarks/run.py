@@ -5,6 +5,9 @@
               vs eager loop vs Algorithm 1) -> BENCH_serve.json
   serve-async : single-jit vs K-stage pipelined serving (throughput +
               request latency percentiles) -> BENCH_serve_async.json
+  serve-qos : mixed traffic classes at two arrival rates (per-class
+              queueing/assembly/compute split, SLO miss + drop rates)
+              -> BENCH_serve_qos.json
   ablation  : allocator objectives (paper greedy / exact / waterfill)
               + pipeline stage balance on the TPU mesh
   roofline  : three-term roofline per (arch x shape x mesh) cell
@@ -42,7 +45,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("which", nargs="?", default="all",
                     choices=("all", "table1", "serve", "serve-async",
-                             "ablation", "roofline", "kernels"))
+                             "serve-qos", "ablation", "roofline",
+                             "kernels"))
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI setting (AlexNet-only, small batch)")
     args = ap.parse_args(argv)
@@ -57,6 +61,9 @@ def main(argv=None) -> int:
     if only in ("all", "serve-async"):
         from benchmarks import serve_async_bench
         serve_async_bench.run(emit, quick=args.quick)
+    if only in ("all", "serve-qos"):
+        from benchmarks import serve_qos_bench
+        serve_qos_bench.run(emit, quick=args.quick)
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run_objectives(emit)

@@ -10,6 +10,11 @@ single-jit baseline (one stage == ``compile_runner``'s whole chain), so
 directly. Results land in one JSON artifact (``BENCH_serve_async.json``,
 built, validated and uploaded by the CI bench-smoke job).
 
+The open-loop stream comes from the one seeded synthetic-traffic
+generator (``repro.serving.traffic.make_schedule`` via ``serve_async``)
+that ``serve_qos_bench.py`` also replays; the recorded ``seed`` field
+reproduces the exact arrival schedule and frames.
+
   PYTHONPATH=src:. python benchmarks/serve_async_bench.py --quick  # CI
   PYTHONPATH=src:. python benchmarks/serve_async_bench.py          # full
 """

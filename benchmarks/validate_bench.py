@@ -10,9 +10,14 @@ Schemas are selected by the artifact's ``bench`` field:
   (``benchmarks/serve_bench.py``);
 * ``serve_async`` — per stage count K: steady throughput, p50/p95/p99
   request latency, and throughput relative to the K=1 single-jit baseline
-  (``benchmarks/serve_async_bench.py``).
+  (``benchmarks/serve_async_bench.py``);
+* ``serve_qos`` — per arrival rate and per traffic class (at least two):
+  queueing/assembly/compute phase-split percentiles, SLO miss rate, and
+  drop rate, plus the recorded seed that replays the schedule
+  (``benchmarks/serve_qos_bench.py``).
 
-  python benchmarks/validate_bench.py BENCH_serve.json BENCH_serve_async.json
+  python benchmarks/validate_bench.py BENCH_serve.json \
+      BENCH_serve_async.json BENCH_serve_qos.json
 """
 
 from __future__ import annotations
@@ -32,6 +37,18 @@ REQUIRED_STAGE_KEYS = ("measured_steady_fps", "modeled_fps_alg1",
 POSITIVE_STAGE_KEYS = ("measured_steady_fps", "arrival_fps",
                        "latency_ms_p50", "latency_ms_p95",
                        "latency_ms_p99", "throughput_vs_single_jit")
+
+
+REQUIRED_QOS_MODEL_KEYS = ("measured_steady_fps", "modeled_fps_alg1",
+                           "batch", "stages", "seed", "slo_ms",
+                           "traffic_mix", "rates", "route")
+REQUIRED_QOS_RATE_KEYS = ("arrival_fps", "load_factor", "submitted",
+                          "completed", "expired", "classes")
+REQUIRED_QOS_CLASS_KEYS = ("submitted", "completed", "expired",
+                           "rejected", "slo_miss_rate", "drop_rate",
+                           "phase_ms")
+QOS_PHASES = ("queueing", "assembly", "compute")
+QOS_PCTS = ("p50", "p95", "p99")
 
 
 def _positive(row: dict, key: str) -> bool:
@@ -79,6 +96,85 @@ def _validate_async_model(name: str, row: dict, errors: list[str]) -> None:
                           f"{srow['latency_ms_p50']})")
 
 
+def _validate_qos_class(where: str, crow: dict, errors: list[str]) -> None:
+    for key in REQUIRED_QOS_CLASS_KEYS:
+        if key not in crow:
+            errors.append(f"{where}: missing {key}")
+    for key in ("slo_miss_rate", "drop_rate"):
+        v = crow.get(key)
+        if key in crow and not (isinstance(v, (int, float))
+                                and 0 <= v <= 1):
+            errors.append(f"{where}.{key}={v!r} not in [0, 1]")
+    phases = crow.get("phase_ms")
+    if not isinstance(phases, dict):
+        errors.append(f"{where}: missing phase_ms")
+        return
+    for phase in QOS_PHASES:
+        prow = phases.get(phase)
+        if not isinstance(prow, dict):
+            errors.append(f"{where}.phase_ms: missing {phase}")
+            continue
+        for p in QOS_PCTS:
+            if not isinstance(prow.get(p), (int, float)):
+                errors.append(f"{where}.phase_ms.{phase}: missing {p}")
+    # Completed-request percentiles must be ordered (NaN — an empty
+    # class — compares False and is allowed: a quick run may complete
+    # nothing for a class under heavy overload).
+    comp = phases.get("compute")
+    if isinstance(comp, dict) and \
+            isinstance(comp.get("p50"), float) and \
+            isinstance(comp.get("p99"), float) and \
+            comp["p99"] < comp["p50"]:
+        errors.append(f"{where}: compute p99 < p50 "
+                      f"({comp['p99']} < {comp['p50']})")
+
+
+def _validate_qos_model(name: str, row: dict, errors: list[str]) -> None:
+    for key in REQUIRED_QOS_MODEL_KEYS:
+        if key not in row:
+            errors.append(f"models.{name}: missing {key}")
+    if not _positive(row, "measured_steady_fps"):
+        errors.append(f"models.{name}.measured_steady_fps="
+                      f"{row.get('measured_steady_fps')!r} not > 0")
+    mix = row.get("traffic_mix")
+    if not isinstance(mix, list) or len(mix) < 2:
+        errors.append(f"models.{name}: traffic_mix needs >= 2 classes, "
+                      f"got {mix!r}")
+    rates = row.get("rates")
+    if not isinstance(rates, dict) or len(rates) < 2:
+        errors.append(f"models.{name}: needs >= 2 arrival rates, got "
+                      f"{sorted(rates) if isinstance(rates, dict) else rates!r}")
+        return
+    for rate_key, rrow in rates.items():
+        where = f"models.{name}.rates.{rate_key}"
+        if not isinstance(rrow, dict):
+            errors.append(f"{where}: row is {type(rrow).__name__}, "
+                          f"not object")
+            continue
+        for key in REQUIRED_QOS_RATE_KEYS:
+            if key not in rrow:
+                errors.append(f"{where}: missing {key}")
+        if not _positive(rrow, "arrival_fps"):
+            errors.append(f"{where}.arrival_fps="
+                          f"{rrow.get('arrival_fps')!r} not > 0")
+        classes = rrow.get("classes")
+        if not isinstance(classes, dict) or len(classes) < 2:
+            errors.append(f"{where}: needs >= 2 traffic classes, got "
+                          f"{sorted(classes) if isinstance(classes, dict) else classes!r}")
+            continue
+        n = sum(c.get("submitted", 0) for c in classes.values()
+                if isinstance(c, dict))
+        if rrow.get("submitted") != n:
+            errors.append(f"{where}: class submitted counts {n} do not "
+                          f"reconcile with total {rrow.get('submitted')!r}")
+        for cname, crow in classes.items():
+            if not isinstance(crow, dict):
+                errors.append(f"{where}.classes.{cname}: row is "
+                              f"{type(crow).__name__}, not object")
+                continue
+            _validate_qos_class(f"{where}.classes.{cname}", crow, errors)
+
+
 def validate(path: str) -> list[str]:
     errors: list[str] = []
     try:
@@ -93,9 +189,11 @@ def validate(path: str) -> list[str]:
     if data.get("schema_version") != 1:
         errors.append(f"schema_version={data.get('schema_version')!r} != 1")
     bench = data.get("bench", "serve")
-    if bench not in ("serve", "serve_async"):
+    if bench not in ("serve", "serve_async", "serve_qos"):
         errors.append(f"unknown bench kind {bench!r}")
         return errors
+    if bench == "serve_qos" and not isinstance(data.get("seed"), int):
+        errors.append("serve_qos artifact must record its schedule seed")
     models = data.get("models")
     if not isinstance(models, dict) or not models:
         errors.append("empty or missing 'models'")
@@ -107,6 +205,8 @@ def validate(path: str) -> list[str]:
             continue
         if bench == "serve":
             _validate_serve_model(name, row, errors)
+        elif bench == "serve_qos":
+            _validate_qos_model(name, row, errors)
         else:
             _validate_async_model(name, row, errors)
     return errors

@@ -10,16 +10,23 @@ subsystem instead: Algorithm 1's balance objective splits the step chain
 into K near-equal stages, one worker thread per stage with depth-2
 queues (the activation double-buffer analogue), and the async frontend
 batches an open-loop request stream into it, reporting p50/p95/p99
-request latency.
+request latency. ``--place-stages`` pins stage i to its own device
+(round-robin over ``jax.devices()``; transparent on one device).
+
+With ``--qos`` the stream is a two-class mix (25% interactive with a
+deadline, 75% best-effort batch) through the QoS frontend's priority
+lanes, replayed below and above saturation — per-class latency split
+into queueing / assembly / compute, with SLO miss and drop rates.
 
   PYTHONPATH=src python examples/cnn_serving.py [--model alexnet]
   PYTHONPATH=src python examples/cnn_serving.py --stages 2
+  PYTHONPATH=src python examples/cnn_serving.py --stages 2 --qos
 """
 
 import argparse
 
 from repro.core import workload as W
-from repro.launch.serve_cnn import serve, serve_async
+from repro.launch.serve_cnn import serve, serve_async, serve_qos
 
 
 def main():
@@ -31,10 +38,36 @@ def main():
     ap.add_argument("--stages", type=int, default=0,
                     help="serve through the K-stage pipeline + async "
                          "frontend (0 = single-jit executor)")
+    ap.add_argument("--place-stages", action="store_true",
+                    help="pin stage i to jax.devices()[i %% n]")
+    ap.add_argument("--qos", action="store_true",
+                    help="mixed-traffic QoS demo (priority lanes, "
+                         "deadlines, phase-split latency)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="interactive-class deadline (default: derived "
+                         "from the measured service time)")
     args = ap.parse_args()
-    if args.stages > 0:
+    if args.slo_ms is not None:      # an SLO only means anything in QoS
+        args.qos = True              # mode — match the launcher CLI
+    if args.qos:
+        r = serve_qos(args.model, frames=max(args.frames, 4 * args.batch),
+                      batch=args.batch, stages=max(args.stages, 1),
+                      slo_ms=args.slo_ms, place_stages=args.place_stages)
+        print(f"\n{r['stages']}-stage QoS serving of {r['model']} "
+              f"(slo {r['slo_ms']:.0f} ms, steady "
+              f"{r['measured_steady_fps']:.1f} fps):")
+        for rate_key, rrow in r["rates"].items():
+            print(f"  load {rate_key} ({rrow['arrival_fps']:.1f} fps):")
+            for name, crow in rrow["classes"].items():
+                ph = crow["phase_ms"]
+                print(f"    {name:12s} p95 queue {ph['queueing']['p95']:8.1f}"
+                      f" ms | assemble {ph['assembly']['p95']:8.1f} ms | "
+                      f"compute {ph['compute']['p95']:8.1f} ms | "
+                      f"miss {crow['slo_miss_rate']:5.0%} | "
+                      f"drop {crow['drop_rate']:5.0%}")
+    elif args.stages > 0:
         r = serve_async(args.model, frames=args.frames, batch=args.batch,
-                        stages=args.stages)
+                        stages=args.stages, place_stages=args.place_stages)
         print(f"\n{r['stages']}-stage pipeline (boundaries "
               f"{r['boundaries']}, balance {r['stage_balance']:.2f}): "
               f"steady {r['measured_steady_fps']:.1f} fps at batch "

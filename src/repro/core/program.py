@@ -257,7 +257,8 @@ class EngineProgram:
     def compile_stage_runner(self, start: int, stop: int, *,
                              route: str | None = None,
                              interpret: bool | None = None,
-                             donate: bool | None = None) -> "CompiledRunner":
+                             donate: bool | None = None,
+                             device=None) -> "CompiledRunner":
         """Jit the contiguous step range ``[start, stop)`` as one device
         program — one *stage* of the software layer-wise pipeline
         (``repro.serving``). Activations cross stage boundaries as the same
@@ -265,7 +266,16 @@ class EngineProgram:
         steps, so chaining stage runners end to end reproduces
         :meth:`compile_runner` bit-exactly for every route (pinned by
         ``tests/test_serving.py``). ``compile_runner`` itself is the
-        degenerate single-stage case ``[0, len(steps))``."""
+        degenerate single-stage case ``[0, len(steps))``.
+
+        ``device`` pins the stage to one ``jax.Device``: inputs are
+        ``jax.device_put`` onto it before dispatch, so the jit traces,
+        compiles, and runs there (weights, captured as constants, follow).
+        This is how the serving pipeline places each stage on its own
+        device — the software analogue of each paper engine owning its
+        own DSP/BRAM partition. Placement never changes the integers:
+        every route is bit-exact on any backend, so placed output ==
+        unplaced output (pinned by ``tests/test_serving.py``)."""
         if self.steps is None:
             raise ValueError(
                 "plan-only program (compiled without params) cannot run")
@@ -295,7 +305,7 @@ class EngineProgram:
 
         fn = jax.jit(chain, donate_argnums=(0,) if donate else ())
         return CompiledRunner(program=self, route=route, donate=donate,
-                              fn=fn, start=start, stop=stop)
+                              fn=fn, start=start, stop=stop, device=device)
 
 
 @dataclasses.dataclass
@@ -321,6 +331,7 @@ class CompiledRunner:
     fn: Callable[[jnp.ndarray], jnp.ndarray]
     start: int = 0
     stop: int = -1          # -1 == len(program.steps) (whole chain)
+    device: object = None   # jax.Device pin (None = backend default)
 
     def __post_init__(self):
         if self.stop < 0:
@@ -351,9 +362,19 @@ class CompiledRunner:
         final accumulators (async — block or fetch to synchronize). With
         donation on, a jnp input is copied first — ``jnp.asarray`` would
         alias the caller's buffer, and donating that alias invalidates
-        the caller's array (host numpy input is always staged fresh)."""
-        if self.donate and isinstance(xq, jax.Array):
+        the caller's array (host numpy input is always staged fresh).
+        A ``device`` pin commits the input there first, so jit executes
+        the stage on that device. The donation guard copies only when
+        the input would otherwise alias: ``device_put`` onto the
+        array's *current* device can return the same buffer, but a
+        cross-device transfer already yields a fresh one — copying
+        there too would waste an activation copy per micro-batch on
+        the placed multi-device hot path."""
+        if self.donate and isinstance(xq, jax.Array) and \
+                (self.device is None or xq.devices() == {self.device}):
             xq = jnp.array(xq, copy=True)
+        if self.device is not None:
+            xq = jax.device_put(xq, self.device)
         return self.fn(jnp.asarray(xq))
 
     def dequantize(self, acc) -> np.ndarray:

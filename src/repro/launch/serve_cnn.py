@@ -9,11 +9,20 @@ FPS next to the Algorithm-1 predicted FPS of the same plan (the paper's
 modeled pipeline throughput on the ZC706-class budget) — plus request
 latency percentiles for the async path.
 
+With ``--qos`` (or ``--traffic-mix`` / ``--slo-ms``) the stream is a
+mixed-traffic arrival process through the QoS frontend: priority lanes,
+per-request deadlines with drop-on-SLO-miss, and per-class latency split
+into queueing / assembly / compute. ``--place-stages`` pins stage i to
+``jax.devices()[i % n]`` (transparent on a single device).
+
 Examples (CPU):
   PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
       --frames 64 --batch 16
   PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
       --frames 64 --batch 16 --stages 2 --max-wait-ms 10
+  PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
+      --frames 64 --batch 16 --stages 2 --qos --slo-ms 200 \
+      --traffic-mix "interactive:1:0.25:slo,batch:0:0.75"
 """
 
 from __future__ import annotations
@@ -125,11 +134,38 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
     return result
 
 
+def _pipeline_throughput(px, stream, batch):
+    """Warmup + closed-loop steady-state throughput of one pipeline:
+    one micro-batch through all K stages compiles every stage jit (stats
+    reset afterwards so the measured window is pure steady state —
+    without this, batches queued during the cold compiles flood out the
+    moment the pipeline opens and a short stream reads an absurd fps),
+    then a saturating closed-loop pass. Returns (warmup_s, phase-1
+    stats snapshot) — snapshotting keeps the counts describing exactly
+    the window steady_fps was measured over (later frontend phases keep
+    accumulating into ``px.stats``)."""
+    t0 = time.perf_counter()
+    px.serve(list(stream[:batch]))
+    warmup_s = time.perf_counter() - t0
+    px.reset_stats()
+    px.serve(list(stream))
+    return warmup_s, dataclasses.replace(px.stats)
+
+
+def _default_max_wait_ms(batch: int, rate: float) -> float:
+    """One full batch assembles in batch/rate seconds; waiting any less
+    flushes padded partial batches faster than the pipeline drains them
+    (service rate collapses), any more only parks the first frame of a
+    quiet period."""
+    return 1e3 * batch / rate if rate > 0 else 50.0
+
+
 def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
                 stages: int = 2, bits: int = 8, route: str | None = None,
                 seed: int = 0, theta: int | None = None,
                 max_wait_ms: float | None = None,
                 arrival_fps: float | None = None,
+                place_stages: bool = False,
                 output: str = "top1", program=None,
                 verbose: bool = True) -> dict:
     """Serve ``frames`` synthetic frames through the K-stage pipelined
@@ -137,22 +173,24 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
 
     Two measurement phases over one compiled pipeline:
 
-    1. **throughput** — after a warmup batch compiles every stage jit
-       (stats reset so the window is pure steady state), a closed-loop
-       stream straight into the :class:`PipelineExecutor` (saturating,
-       no frontend) measures steady-state FPS, the number the single-jit
-       path's ``measured_steady_fps`` is compared against;
+    1. **throughput** — closed-loop stream straight into the
+       :class:`PipelineExecutor` (saturating, no frontend) after a
+       warmup pass, measuring the steady-state FPS the single-jit path's
+       ``measured_steady_fps`` is compared against;
     2. **latency** — the :class:`AsyncFrontend` replays the stream as an
        open-loop arrival process at ``arrival_fps`` (default: 70% of the
-       measured throughput) and records per-request p50/p95/p99.
-       ``max_wait_ms`` defaults to one full-batch assembly window at the
-       arrival rate (``batch / arrival_fps``), so the dynamic batcher
-       neither thrashes on padded 1-frame batches nor parks lone frames.
+       measured throughput, scheduled by the shared seeded generator
+       :func:`repro.serving.traffic.make_schedule`) and records
+       per-request p50/p95/p99. ``max_wait_ms`` defaults to one
+       full-batch assembly window at the arrival rate.
 
-    Pass ``program`` to reuse an already-compiled program (the bench
-    sweeps stage counts over one compile).
+    ``place_stages`` pins stage i to ``jax.devices()[i % n]``
+    (transparent on a single device). Pass ``program`` to reuse an
+    already-compiled program (the bench sweeps stage counts over one
+    compile).
     """
-    from repro.serving import AsyncFrontend, PipelineExecutor
+    from repro.serving import (AsyncFrontend, PipelineExecutor,
+                               TrafficClass, make_schedule, replay)
 
     if frames <= batch:
         raise ValueError(f"frames={frames} <= batch={batch}: no "
@@ -162,48 +200,22 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
     stream = synthetic_stream(model_name, frames, seed)
 
     px = PipelineExecutor(prog, stages=stages, batch_size=batch,
-                          route=route, output=output)
+                          route=route, output=output,
+                          place_stages=place_stages)
     part = px.partition
     with px:
-        # Warmup: one micro-batch through all K stages compiles every
-        # stage jit. Resetting afterwards makes the measured window pure
-        # steady state — without this, batches queued during the cold
-        # compiles flood out the moment the pipeline opens and a short
-        # stream reads an absurd fps.
-        t0 = time.perf_counter()
-        px.serve(list(stream[:batch]))
-        warmup_s = time.perf_counter() - t0
-        px.reset_stats()
-
-        # Phase 1: closed-loop throughput (hot jits, every frame counts).
-        px.serve(list(stream))
-        # Snapshot before phase 2 keeps these counts describing exactly
-        # the window steady_fps was measured over (the frontend phase
-        # keeps accumulating into px.stats).
-        ph1 = dataclasses.replace(px.stats)
+        warmup_s, ph1 = _pipeline_throughput(px, stream, batch)
         steady = ph1.steady_fps
 
-        # Phase 2: open-loop latency at a sustainable arrival rate.
+        # Phase 2: open-loop latency at a sustainable arrival rate, one
+        # best-effort class (the QoS path is serve_qos).
         rate = arrival_fps if arrival_fps is not None else 0.7 * steady
         if max_wait_ms is None:
-            # One full batch assembles in batch/rate seconds; waiting any
-            # less flushes padded partial batches faster than the
-            # pipeline drains them (service rate collapses), any more
-            # only parks the first frame of a quiet period.
-            max_wait_ms = 1e3 * batch / rate if rate > 0 else 50.0
+            max_wait_ms = _default_max_wait_ms(batch, rate)
         fe = AsyncFrontend(px, max_wait_ms=max_wait_ms)
-        period = 1.0 / rate if rate > 0 else 0.0
-        t_next = time.perf_counter()
-        reqs = []
-        for f in stream:
-            if period:
-                delay = t_next - time.perf_counter()
-                if delay > 0:
-                    time.sleep(delay)
-                t_next += period
-            reqs.append(fe.submit(f))
-        for r in reqs:
-            r.result(timeout=600)
+        schedule = make_schedule(len(stream), rate,
+                                 [TrafficClass("default")], seed=seed)
+        replay(fe, stream, schedule)
         fe.close()
 
     lat = fe.stats.latency_percentiles()
@@ -216,6 +228,7 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
         "boundaries": list(part.boundaries),
         "stage_cycles": [round(c, 1) for c in part.stage_cycles],
         "stage_balance": round(part.balance, 4),
+        "placed": place_stages,
         "frames": ph1.frames,
         "batches": ph1.batches,
         "padded_frames": ph1.padded_frames,
@@ -243,6 +256,154 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
     return result
 
 
+def _class_row(cs) -> dict:
+    """One traffic class's QoS row: outcome counts, SLO rates, and the
+    phase-split latency percentiles (ms)."""
+    pp = cs.phase_percentiles()
+    return {
+        "submitted": cs.submitted,
+        "completed": cs.completed,
+        "expired": cs.expired,
+        "rejected": cs.rejected,
+        "failed": cs.failed,
+        "late": cs.late,
+        "drop_rate": round(cs.drop_rate, 4),
+        "slo_miss_rate": round(cs.slo_miss_rate, 4),
+        "phase_ms": {
+            phase: {p: round(v * 1e3, 3) for p, v in pcts.items()}
+            for phase, pcts in pp.items()},
+    }
+
+
+def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
+              stages: int = 2, bits: int = 8, route: str | None = None,
+              seed: int = 0, theta: int | None = None,
+              slo_ms: float | None = None,
+              traffic_mix=None,
+              load_factors: tuple[float, ...] = (0.6, 1.2),
+              arrival_fps: float | None = None,
+              max_wait_ms: float | None = None,
+              place_stages: bool = False,
+              poisson: bool = False,
+              output: str = "top1", program=None,
+              verbose: bool = True) -> dict:
+    """Serve a mixed-traffic stream through the QoS frontend and report
+    per-class phase-split latency, SLO miss rate, and drop rate.
+
+    After the closed-loop throughput phase (shared with
+    :func:`serve_async`), each entry of ``load_factors`` replays the
+    same seeded mixed-class schedule
+    (:func:`repro.serving.traffic.make_schedule`) open-loop at
+    ``factor * measured_steady_fps`` — one rate below saturation and one
+    above shows the QoS machinery working: under overload the priority
+    lanes keep the interactive class inside its deadline while the
+    best-effort class absorbs the queueing, and deadline-armed requests
+    that cannot make it are dropped (``expired``), not served late.
+    ``arrival_fps`` overrides the factor-derived rates with absolute
+    rates ``factor * arrival_fps`` instead.
+
+    ``traffic_mix`` is a sequence of :class:`TrafficClass` (default:
+    25% interactive priority-1 with deadline ``slo_ms``, 75%
+    best-effort batch). A ``slo_ms`` of None is derived from the
+    measured service time — ``(stages + 3)`` batch windows at the
+    steady rate — so the deadline is feasible below saturation on any
+    backend but binds under overload (a fixed wall-clock default would
+    be always-missed for a slow model on CPU and never-missed for a
+    fast one, telling us nothing).
+    """
+    from repro.serving import (AsyncFrontend, PipelineExecutor,
+                               default_mix, make_schedule, replay)
+
+    if frames <= batch:
+        raise ValueError(f"frames={frames} <= batch={batch}: no "
+                         f"steady-state window (use frames >= 2*batch)")
+    prog = program if program is not None else compile_for_serving(
+        model_name, bits=bits, seed=seed, theta=theta)
+    stream = synthetic_stream(model_name, frames, seed)
+
+    px = PipelineExecutor(prog, stages=stages, batch_size=batch,
+                          route=route, output=output,
+                          place_stages=place_stages)
+    part = px.partition
+    rates: dict[str, dict] = {}
+    with px:
+        warmup_s, ph1 = _pipeline_throughput(px, stream, batch)
+        steady = ph1.steady_fps
+        base = arrival_fps if arrival_fps is not None else steady
+        if slo_ms is None:
+            # A request's best case traverses assembly (~1 window) plus
+            # the K-stage pipeline with its depth-2 queues; ~stages + 3
+            # windows is comfortably feasible below saturation.
+            slo_ms = round((part.n_stages + 3) * 1e3 * batch
+                           / max(steady, 1e-9), 1)
+        mix = tuple(traffic_mix) if traffic_mix is not None \
+            else default_mix(slo_ms)
+
+        for factor in load_factors:
+            rate = factor * base
+            wait_ms = (max_wait_ms if max_wait_ms is not None
+                       else _default_max_wait_ms(batch, min(rate, steady)))
+            fe = AsyncFrontend(px, max_wait_ms=wait_ms)
+            schedule = make_schedule(len(stream), rate, mix, seed=seed,
+                                     poisson=poisson)
+            replay(fe, stream, schedule)
+            fe.close()
+            st = fe.stats
+            rates[f"{factor:g}x"] = {
+                "load_factor": factor,
+                "arrival_fps": round(rate, 3),
+                "client_fps": round(st.fps, 3),
+                "max_wait_ms": round(wait_ms, 3),
+                "submitted": st.submitted,
+                "completed": st.completed,
+                "expired": st.expired,
+                "rejected": st.rejected,
+                "failed": st.failed,
+                "batches": st.batches,
+                "flushes_full": st.flushes_full,
+                "flushes_timeout": st.flushes_timeout,
+                "flushes_deadline": st.flushes_deadline,
+                "classes": {name: _class_row(cs)
+                            for name, cs in sorted(st.classes.items())},
+            }
+            if verbose:
+                parts = []
+                for name, cs in sorted(st.classes.items()):
+                    pq = cs.phase_percentiles()
+                    parts.append(
+                        f"{name}: p95 q/a/c "
+                        f"{pq['queueing']['p95'] * 1e3:.1f}/"
+                        f"{pq['assembly']['p95'] * 1e3:.1f}/"
+                        f"{pq['compute']['p95'] * 1e3:.1f}ms "
+                        f"miss {cs.slo_miss_rate:.0%} "
+                        f"drop {cs.drop_rate:.0%}")
+                print(f"[serve_qos] {model_name} K={part.n_stages} "
+                      f"load {factor:g}x ({rate:.1f} fps): "
+                      + " | ".join(parts))
+
+    return {
+        "model": model_name,
+        "bits": bits,
+        "route": px.route,
+        "batch": batch,
+        "stages": part.n_stages,
+        "boundaries": list(part.boundaries),
+        "stage_balance": round(part.balance, 4),
+        "placed": place_stages,
+        "stage_devices": ([str(d) for d in px.stage_devices]
+                          if place_stages else None),
+        "seed": seed,
+        "slo_ms": slo_ms,
+        "poisson": poisson,
+        "traffic_mix": [c.to_json() for c in mix],
+        "frames": frames,
+        "compile_plus_warmup_s": round(warmup_s, 3),
+        "measured_steady_fps": round(steady, 3),
+        "modeled_fps_alg1": round(prog.fps(), 3),
+        "rates": rates,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="alexnet",
@@ -267,6 +428,20 @@ def main(argv=None) -> int:
     ap.add_argument("--arrival-fps", type=float, default=None,
                     help="open-loop request rate (default: 70%% of the "
                          "measured pipeline throughput)")
+    ap.add_argument("--place-stages", action="store_true",
+                    help="pin stage i to jax.devices()[i %% n] "
+                         "(transparent on a single device)")
+    ap.add_argument("--qos", action="store_true",
+                    help="serve a mixed-traffic stream through the QoS "
+                         "frontend (priority lanes + deadlines) and "
+                         "report per-class phase-split latency")
+    ap.add_argument("--traffic-mix", default=None,
+                    help="QoS mix as name:priority:share[:deadline_ms] "
+                         "comma-separated ('slo' = --slo-ms; default: "
+                         "interactive:1:0.25:slo,batch:0:0.75)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="deadline for the default interactive class "
+                         "(implies --qos)")
     ap.add_argument("--seed", type=int, default=0,
                     help="params/calibration/stream RNG seed")
     ap.add_argument("--quick", action="store_true",
@@ -274,12 +449,26 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.quick:
         args.frames, args.batch = 8, 4
-    if args.stages > 0:
+    qos = args.qos or args.traffic_mix is not None or args.slo_ms is not None
+    if qos:
+        from repro.serving import parse_traffic_mix
+        # slo_ms=None lets serve_qos derive a feasible deadline from
+        # the measured service time; only an explicit --slo-ms pins it
+        # (and is required when --traffic-mix uses the 'slo' token).
+        mix = (parse_traffic_mix(args.traffic_mix, args.slo_ms)
+               if args.traffic_mix else None)
+        serve_qos(args.model, frames=args.frames, batch=args.batch,
+                  stages=max(args.stages, 1), bits=args.bits,
+                  route=args.route, seed=args.seed, slo_ms=args.slo_ms,
+                  traffic_mix=mix, arrival_fps=args.arrival_fps,
+                  max_wait_ms=args.max_wait_ms,
+                  place_stages=args.place_stages, output=args.output)
+    elif args.stages > 0:
         serve_async(args.model, frames=args.frames, batch=args.batch,
                     stages=args.stages, bits=args.bits, route=args.route,
                     max_wait_ms=args.max_wait_ms,
                     arrival_fps=args.arrival_fps, output=args.output,
-                    seed=args.seed)
+                    place_stages=args.place_stages, seed=args.seed)
     else:
         serve(args.model, frames=args.frames, batch=args.batch,
               bits=args.bits, route=args.route, seed=args.seed,

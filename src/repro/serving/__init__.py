@@ -6,23 +6,40 @@ balance objective splits a compiled :class:`~repro.core.program
 (:mod:`~repro.serving.partition`), one worker thread per stage executes
 its jitted step range with depth-2 bounded queues between stages — the
 activation double-buffer analogue (:mod:`~repro.serving
-.pipeline_executor`) — and an async request frontend batches live traffic
-into the pipeline with backpressure and per-request latency accounting
-(:mod:`~repro.serving.frontend`).
+.pipeline_executor`), optionally with each stage placed on its own
+device — and a QoS-aware request frontend batches live traffic into the
+pipeline through priority lanes with per-request deadlines,
+backpressure, and per-class phase-split latency accounting
+(:mod:`~repro.serving.frontend`). :mod:`~repro.serving.traffic` is the
+one seeded synthetic-traffic generator every serving bench replays.
 """
 
-from repro.serving.frontend import (AsyncFrontend, FrontendStats,
-                                    ServedRequest)
+from repro.serving.frontend import (AsyncFrontend, ClassStats,
+                                    DeadlineExpired, FrontendStats,
+                                    RequestRejected, ServedRequest)
 from repro.serving.partition import (StagePartition, partition_program,
-                                     step_cycles)
+                                     stage_devices, step_cycles)
 from repro.serving.pipeline_executor import PipelineExecutor
+from repro.serving.traffic import (Arrival, TrafficClass, default_mix,
+                                   make_schedule, parse_traffic_mix,
+                                   replay)
 
 __all__ = [
+    "Arrival",
     "AsyncFrontend",
+    "ClassStats",
+    "DeadlineExpired",
     "FrontendStats",
     "PipelineExecutor",
+    "RequestRejected",
     "ServedRequest",
     "StagePartition",
+    "TrafficClass",
+    "default_mix",
+    "make_schedule",
+    "parse_traffic_mix",
     "partition_program",
+    "replay",
+    "stage_devices",
     "step_cycles",
 ]

@@ -1,22 +1,35 @@
-"""Async request frontend: submission queue, dynamic batcher, latency SLOs.
+"""Async request frontend: priority lanes, deadlines, dynamic batcher.
 
-Non-synthetic traffic arrives one frame at a time, at arbitrary rates;
-the engines underneath want fixed-shape micro-batches. The frontend
-bridges the two (the ROADMAP's "real async frontend (queue + worker
-thread)"):
+Non-synthetic traffic arrives one frame at a time, at arbitrary rates,
+and not all of it is equal: an interactive frame wants an answer inside
+its deadline, a bulk re-index frame only wants an answer eventually. The
+engines underneath want fixed-shape micro-batches. The frontend bridges
+the two (the QoS analogue of the FPGA's stream arbitration in front of
+the engine pipeline):
 
-* :meth:`AsyncFrontend.submit` enqueues a request into a *bounded*
-  submission queue and returns a :class:`ServedRequest` handle
-  immediately. A full queue blocks the caller (backpressure — the same
-  stall a full activation buffer exerts on the paper's producer engine)
-  or raises :class:`queue.Full` when ``timeout`` expires.
-* a batcher thread assembles micro-batches dynamically: a batch is
-  flushed when it reaches ``batch_size`` frames **or** the oldest queued
-  request has waited ``max_wait_ms`` — so a lone frame never waits for a
-  full batch, and a saturating stream never pays the timeout.
-* completed micro-batches come back through the executor's ``on_result``
-  hook; per-request latency (submit -> result) is recorded for the
-  p50/p95/p99 figures :class:`FrontendStats` reports.
+* :meth:`AsyncFrontend.submit` enqueues a request into a *bounded
+  per-priority lane* and returns a :class:`ServedRequest` handle
+  immediately. Requests carry ``(priority, deadline_ms)``; a full lane
+  blocks the caller (backpressure — the same stall a full activation
+  buffer exerts on the paper's producer engine) or raises
+  :class:`queue.Full` when ``timeout`` expires. Per-lane bounds mean a
+  flood in one class cannot exhaust another class's admission capacity.
+* a batcher thread assembles micro-batches dynamically,
+  **highest-priority lane first**: a batch is flushed when it reaches
+  ``batch_size`` frames, when the oldest member has waited
+  ``max_wait_ms``, **or** when holding it any longer would push a
+  member past its deadline (the expedited flush).
+* a request whose deadline passes while it is still queued or assembling
+  is *dropped*, resolving with an ``expired`` outcome (``result()``
+  raises :class:`DeadlineExpired`) instead of wasting a batch slot —
+  the software form of a frame-rate bound: a frame that missed its
+  display slot is not worth computing.
+* every request records four timestamps — ``t_submit`` (enters its
+  lane), ``t_batched`` (popped into an assembling batch),
+  ``t_dispatched`` (micro-batch handed to the executor), ``t_done``
+  (resolved) — so :class:`FrontendStats` can split latency into
+  queueing / assembly / compute percentiles *per traffic class*, not
+  just end to end.
 
 The executor can be a :class:`~repro.serving.pipeline_executor
 .PipelineExecutor` (K-stage pipeline) or a thread-safe
@@ -27,6 +40,7 @@ The executor can be a :class:`~repro.serving.pipeline_executor
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -34,37 +48,119 @@ import time
 
 import numpy as np
 
+DEFAULT_CLASS = "default"
+
+# Outcomes a ServedRequest can resolve with.
+PENDING = "pending"
+COMPLETED = "completed"
+FAILED = "failed"
+EXPIRED = "expired"      # deadline passed while queued/assembling; dropped
+REJECTED = "rejected"    # refused at admission (full lane, block=False)
+
+
+# The expedited flush fires when this fraction of a request's deadline
+# budget is still left — flushing *at* the deadline would dispatch a
+# batch whose deadline-armed members are already dead on arrival.
+DEADLINE_GUARD_FRAC = 0.2
+
+
+def _urgent_at(req: "ServedRequest") -> float:
+    """The instant the batcher must flush a batch holding ``req``:
+    80% of the deadline budget spent (inf for best-effort requests)."""
+    if req.deadline_s is None:
+        return float("inf")
+    return req.deadline_s - DEADLINE_GUARD_FRAC * (req.deadline_s
+                                                   - req.t_submit)
+
+
+class DeadlineExpired(RuntimeError):
+    """The request's deadline passed before it reached the executor."""
+
+
+class RequestRejected(RuntimeError):
+    """The request was refused at admission (lane full, non-blocking)."""
+
 
 class ServedRequest:
-    """Handle for one in-flight frame: ``result()`` blocks until the
-    pipeline answers (re-raising the serving error if its batch failed);
-    ``latency_s`` is submit -> result wall time."""
+    """Handle for one in-flight frame.
 
-    __slots__ = ("t_submit", "t_done", "_value", "_error", "_event")
+    ``result()`` blocks until the pipeline answers, re-raising the
+    serving error if its batch failed, :class:`DeadlineExpired` if the
+    request was dropped on an SLO miss, or :class:`RequestRejected` if
+    it was refused at admission. The four timestamps
+    ``t_submit -> t_batched -> t_dispatched -> t_done`` chart its path
+    through lane, batcher, and executor; ``phase_s()`` returns the
+    split."""
 
-    def __init__(self):
+    __slots__ = ("priority", "deadline_s", "klass",
+                 "t_submit", "t_batched", "t_dispatched", "t_done",
+                 "_value", "_error", "_outcome", "_event")
+
+    def __init__(self, priority: int = 0, deadline_ms: float | None = None,
+                 klass: str | None = None):
+        self.priority = int(priority)
+        self.klass = klass if klass is not None else (
+            DEFAULT_CLASS if priority == 0 and deadline_ms is None
+            else f"p{priority}")
         self.t_submit = time.perf_counter()
+        # Absolute wall deadline; None = best-effort (never expires).
+        self.deadline_s = (None if deadline_ms is None
+                           else self.t_submit + float(deadline_ms) / 1e3)
+        self.t_batched: float | None = None
+        self.t_dispatched: float | None = None
         self.t_done: float | None = None
         self._value: np.ndarray | None = None
         self._error: BaseException | None = None
+        self._outcome = PENDING
         self._event = threading.Event()
+
+    # -- resolution (frontend-internal) --------------------------------------
 
     def _resolve(self, value) -> None:
         self._value = value
+        self._outcome = COMPLETED
         self.t_done = time.perf_counter()
         self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
         self._error = exc
+        self._outcome = FAILED
         self.t_done = time.perf_counter()
         self._event.set()
+
+    def _expire(self) -> None:
+        self._outcome = EXPIRED
+        self.t_done = time.perf_counter()
+        self._event.set()
+
+    def _reject(self) -> None:
+        self._outcome = REJECTED
+        self.t_done = time.perf_counter()
+        self._event.set()
+
+    # -- client side ---------------------------------------------------------
+
+    @property
+    def outcome(self) -> str:
+        """'pending' | 'completed' | 'failed' | 'expired' | 'rejected'."""
+        return self._outcome
 
     def done(self) -> bool:
         return self._event.is_set()
 
+    def expired(self) -> bool:
+        return self._outcome == EXPIRED
+
     def result(self, timeout: float | None = None):
         if not self._event.wait(timeout):
             raise TimeoutError("request not served within timeout")
+        if self._outcome == EXPIRED:
+            raise DeadlineExpired(
+                f"request dropped: deadline passed after "
+                f"{(self.t_done - self.t_submit) * 1e3:.1f}ms in queue")
+        if self._outcome == REJECTED:
+            raise RequestRejected("request refused at admission "
+                                  "(lane full)")
         if self._error is not None:
             raise RuntimeError("request failed in the serving "
                                "pipeline") from self._error
@@ -74,31 +170,126 @@ class ServedRequest:
     def latency_s(self) -> float | None:
         return None if self.t_done is None else self.t_done - self.t_submit
 
+    def missed_deadline(self) -> bool:
+        """True when the request did not complete inside its deadline —
+        dropped (expired) or completed late."""
+        if self.deadline_s is None or self.t_done is None:
+            return False
+        return self._outcome == EXPIRED or self.t_done > self.deadline_s
+
+    def phase_s(self) -> dict[str, float | None]:
+        """The latency split the four timestamps define: ``queueing``
+        (lane wait), ``assembly`` (in a forming batch), ``compute``
+        (executor dispatch -> result). Phases a dropped request never
+        reached are None."""
+        q = (None if self.t_batched is None
+             else self.t_batched - self.t_submit)
+        a = (None if self.t_dispatched is None or self.t_batched is None
+             else self.t_dispatched - self.t_batched)
+        c = (None if self.t_done is None or self.t_dispatched is None
+             else self.t_done - self.t_dispatched)
+        return {"queueing": q, "assembly": a, "compute": c}
+
+
+def _percentiles(samples: list) -> dict[str, float]:
+    if not samples:
+        nan = float("nan")
+        return {"p50": nan, "p95": nan, "p99": nan, "mean": nan}
+    arr = np.asarray(samples)
+    p50, p95, p99 = np.percentile(arr, [50, 95, 99])
+    return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+            "mean": float(arr.mean())}
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Per-traffic-class accounting: outcome counts and the phase-split
+    latency samples of completed requests."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    expired: int = 0        # dropped on deadline while queued/assembling
+    rejected: int = 0       # refused at admission
+    late: int = 0           # completed, but after the deadline
+    armed: bool = False     # any submission of this class carried a deadline
+    queueing_s: list = dataclasses.field(default_factory=list)
+    assembly_s: list = dataclasses.field(default_factory=list)
+    compute_s: list = dataclasses.field(default_factory=list)
+    total_s: list = dataclasses.field(default_factory=list)
+
+    @property
+    def resolved(self) -> int:
+        return self.completed + self.failed + self.expired + self.rejected
+
+    @property
+    def drop_rate(self) -> float:
+        """Fraction of submissions dropped/refused without compute."""
+        if self.submitted == 0:
+            return 0.0
+        return (self.expired + self.rejected) / self.submitted
+
+    @property
+    def slo_miss_rate(self) -> float:
+        """Fraction of submissions that missed their deadline — dropped,
+        refused at admission, or completed late. 0.0 for a class that
+        never armed a deadline (best-effort requests have no SLO to
+        miss; their admission rejections count only in drop_rate)."""
+        if self.submitted == 0 or not self.armed:
+            return 0.0
+        return (self.expired + self.rejected + self.late) / self.submitted
+
+    def phase_percentiles(self) -> dict[str, dict[str, float]]:
+        """{'queueing'|'assembly'|'compute'|'total': {p50,p95,p99,mean}}
+        in seconds, over *completed* requests (a dropped request never
+        reached the later phases, so it would skew them)."""
+        return {"queueing": _percentiles(self.queueing_s),
+                "assembly": _percentiles(self.assembly_s),
+                "compute": _percentiles(self.compute_s),
+                "total": _percentiles(self.total_s)}
+
 
 @dataclasses.dataclass
 class FrontendStats:
-    """Per-request accounting over one frontend lifetime."""
+    """Per-request accounting over one frontend lifetime, totals plus a
+    per-traffic-class breakdown (``classes``)."""
 
     submitted: int = 0
     completed: int = 0
     failed: int = 0              # requests resolved with an error
+    expired: int = 0             # dropped on deadline (SLO miss)
+    rejected: int = 0            # refused at admission
     batches: int = 0
     flushes_full: int = 0        # batches flushed at batch_size
     flushes_timeout: int = 0     # batches flushed by max_wait_ms
+    flushes_deadline: int = 0    # batches expedited by a member deadline
     latencies_s: list = dataclasses.field(default_factory=list)
+    classes: dict = dataclasses.field(default_factory=dict)
     _t_first: float | None = None
     _t_last: float | None = None
 
+    @property
+    def resolved(self) -> int:
+        """Requests that reached *any* terminal outcome; close() waits
+        for this to reconcile exactly with ``submitted``."""
+        return self.completed + self.failed + self.expired + self.rejected
+
+    def klass(self, name: str) -> ClassStats:
+        cs = self.classes.get(name)
+        if cs is None:
+            cs = self.classes[name] = ClassStats()
+        return cs
+
     def latency_percentiles(self) -> dict[str, float]:
-        """{'p50','p95','p99','mean'} request latency in seconds (NaN
-        when nothing completed yet)."""
-        if not self.latencies_s:
-            nan = float("nan")
-            return {"p50": nan, "p95": nan, "p99": nan, "mean": nan}
-        lat = np.asarray(self.latencies_s)
-        p50, p95, p99 = np.percentile(lat, [50, 95, 99])
-        return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
-                "mean": float(lat.mean())}
+        """{'p50','p95','p99','mean'} end-to-end request latency in
+        seconds over all classes (NaN when nothing completed yet)."""
+        return _percentiles(self.latencies_s)
+
+    def phase_percentiles(self) -> dict[str, dict[str, dict[str, float]]]:
+        """Per-class phase split: {class: {queueing|assembly|compute|
+        total: {p50,p95,p99,mean}}} in seconds."""
+        return {name: cs.phase_percentiles()
+                for name, cs in sorted(self.classes.items())}
 
     @property
     def fps(self) -> float:
@@ -112,13 +303,18 @@ class FrontendStats:
 
 
 class AsyncFrontend:
-    """Dynamic-batching request frontend over a serving executor.
+    """Dynamic-batching QoS frontend over a serving executor.
 
     >>> with PipelineExecutor(prog, stages=2, batch_size=8) as px:
     ...     fe = AsyncFrontend(px, max_wait_ms=5.0)
-    ...     reqs = [fe.submit(f) for f in frames]
-    ...     ids = [r.result() for r in reqs]
+    ...     hi = fe.submit(frame, priority=1, deadline_ms=50.0)
+    ...     lo = fe.submit(frame)                   # best-effort
+    ...     out = hi.result()
     ...     fe.close()
+
+    ``priority`` orders lanes (higher drains first); ``deadline_ms``
+    arms drop-on-SLO-miss and the expedited flush. Both default to the
+    PR-3 behaviour: one best-effort FIFO class.
     """
 
     def __init__(self, executor, *, max_wait_ms: float = 5.0,
@@ -128,16 +324,17 @@ class AsyncFrontend:
         self.executor = executor
         self.batch_size = int(executor.batch_size)
         self.max_wait_s = float(max_wait_ms) / 1e3
+        self.max_queue = max(1, int(max_queue))
         self.stats = FrontendStats()
-        self._q: queue.Queue = queue.Queue(maxsize=max(1, int(max_queue)))
         self._closing = threading.Event()
         self._lock = threading.Lock()
-        # Makes the closing-check + enqueue in submit() atomic against
-        # close(), so no request can slip into the queue after close()'s
-        # straggler drain. Separate from _lock: the holder may block on
-        # a full submission queue while the batcher (which only needs
-        # _lock for stats) drains it.
-        self._submit_lock = threading.Lock()
+        # Lane state: priority -> FIFO deque of (req, frame). _lane_cv
+        # guards lanes + per-lane counts; submit() waits on it when its
+        # lane is full (backpressure), the batcher waits on it for work.
+        # Separate from _lock (stats): a producer blocked on a full lane
+        # must not stop the collector thread from recording completions.
+        self._lane_cv = threading.Condition()
+        self._lanes: dict[int, collections.deque] = {}
         executor.on_result = self._on_result
         if hasattr(executor, "on_error"):
             # Pipelined executors report stage failures asynchronously;
@@ -150,13 +347,23 @@ class AsyncFrontend:
 
     # -- client side ---------------------------------------------------------
 
-    def submit(self, frame: np.ndarray,
-               timeout: float | None = None) -> ServedRequest:
-        """Enqueue one float frame ``[H, W, C]``. Blocks while the
-        submission queue is full (backpressure); raises ``queue.Full``
-        when ``timeout`` (seconds) expires first, ``ValueError`` on a
-        frame the compiled program cannot take, and ``RuntimeError``
-        after :meth:`close`."""
+    def submit(self, frame: np.ndarray, *, priority: int = 0,
+               deadline_ms: float | None = None, klass: str | None = None,
+               timeout: float | None = None,
+               block: bool = True) -> ServedRequest:
+        """Enqueue one float frame ``[H, W, C]`` into the ``priority``
+        lane. ``deadline_ms`` (from now) arms drop-on-SLO-miss;
+        ``klass`` labels the request's traffic class for the stats
+        breakdown (default: 'default' for plain requests, 'p<priority>'
+        otherwise).
+
+        Blocks while the lane is full (backpressure); raises
+        ``queue.Full`` when ``timeout`` (seconds) expires first. With
+        ``block=False`` a full lane instead returns a request already
+        resolved with the ``rejected`` outcome — load-shedding without
+        stalling the caller. Raises ``ValueError`` on a frame the
+        compiled program cannot take and ``RuntimeError`` after
+        :meth:`close`."""
         if self._closing.is_set():
             raise RuntimeError("frontend is closed")
         req_frame = np.asarray(frame)
@@ -169,47 +376,69 @@ class AsyncFrontend:
             if req_frame.shape != want:
                 raise ValueError(f"frame shape {req_frame.shape} does not "
                                  f"match the compiled program {want}")
-        req = ServedRequest()
-        with self._submit_lock:
+        req = ServedRequest(priority=priority, deadline_ms=deadline_ms,
+                            klass=klass)
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._lane_cv:
             if self._closing.is_set():
                 raise RuntimeError("frontend is closed")
-            self._q.put((req, req_frame), timeout=timeout)
-            with self._lock:
-                self.stats.submitted += 1
-                if self.stats._t_first is None:
-                    self.stats._t_first = req.t_submit
+            lane = self._lanes.get(req.priority)
+            if lane is None:
+                lane = self._lanes[req.priority] = collections.deque()
+            while len(lane) >= self.max_queue:
+                if not block:
+                    self._admit(req)
+                    req._reject()
+                    with self._lock:
+                        self.stats.rejected += 1
+                        self.stats.klass(req.klass).rejected += 1
+                    return req
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    raise queue.Full
+                if not self._lane_cv.wait(timeout=remaining):
+                    raise queue.Full
+                if self._closing.is_set():
+                    raise RuntimeError("frontend is closed")
+            self._admit(req)
+            lane.append((req, req_frame))
+            self._lane_cv.notify_all()
         return req
+
+    def _admit(self, req: ServedRequest) -> None:
+        with self._lock:
+            self.stats.submitted += 1
+            cs = self.stats.klass(req.klass)
+            cs.submitted += 1
+            if req.deadline_s is not None:
+                cs.armed = True
+            if self.stats._t_first is None:
+                self.stats._t_first = req.t_submit
 
     def close(self) -> None:
         """Stop accepting requests, flush everything queued, and wait for
-        every in-flight request to complete."""
-        with self._submit_lock:
+        every in-flight request to resolve (completed, failed, expired,
+        or rejected — nothing may hang)."""
+        with self._lane_cv:
             if self._closing.is_set():
                 return
             self._closing.set()
+            self._lane_cv.notify_all()   # wake producers blocked on a lane
         self._batcher.join()
-        # A submit() racing close() may have enqueued after the batcher's
-        # final empty poll — flush any stragglers here so no request is
-        # ever silently dropped.
-        leftover = []
-        while True:
-            try:
-                leftover.append(self._q.get_nowait())
-            except queue.Empty:
-                break
-        for i in range(0, len(leftover), self.batch_size):
-            self._dispatch(leftover[i:i + self.batch_size], False)
-        # Everything is dispatched; make sure trailing micro-batches are
-        # collected (PipelineExecutor's collector runs continuously, the
-        # single-jit EngineExecutor collects on flush).
+        # The batcher exits only after its final drain saw every lane
+        # empty under _lane_cv, and submit() refuses new requests once
+        # _closing is set — so nothing can be left queued here. Collect
+        # trailing micro-batches (PipelineExecutor's collector runs
+        # continuously, the single-jit EngineExecutor collects on flush).
         flush = getattr(self.executor, "flush_inflight", None)
         if flush is not None:
             flush()
         deadline = time.perf_counter() + 60.0
         while True:
             with self._lock:
-                done = self.stats.completed + self.stats.failed
-                if done >= self.stats.submitted:
+                if self.stats.resolved >= self.stats.submitted:
                     break
             if time.perf_counter() > deadline:
                 raise TimeoutError("in-flight requests did not complete")
@@ -228,12 +457,68 @@ class AsyncFrontend:
 
     # -- batcher -------------------------------------------------------------
 
+    def _purge_expired(self, now: float) -> None:
+        """Drop expired requests from *every* lane (caller holds
+        _lane_cv). Expiry cannot wait for a pop: under sustained
+        higher-priority traffic a lower lane might never be popped, and
+        its deadline-armed requests must still resolve ``expired`` at
+        their deadline instead of blocking in result()."""
+        for lane in self._lanes.values():
+            if not any(r.deadline_s is not None and now > r.deadline_s
+                       for r, _ in lane):
+                continue
+            live = []
+            while lane:
+                r, f = lane.popleft()
+                if r.deadline_s is not None and now > r.deadline_s:
+                    self._drop_expired(r)
+                else:
+                    live.append((r, f))
+            lane.extend(live)
+            self._lane_cv.notify_all()   # lane freed admission slots
+
+    def _pop_next(self, timeout: float) -> tuple | None:
+        """Pop the oldest request from the highest-priority non-empty
+        lane (None on timeout). Expired requests anywhere are dropped
+        first — the queueing-phase SLO miss — without consuming a batch
+        slot; the batcher's poll cadence (<= 50 ms between calls) bounds
+        how stale an expiry can go undetected."""
+        deadline = time.perf_counter() + timeout
+        with self._lane_cv:
+            while True:
+                now = time.perf_counter()
+                self._purge_expired(now)
+                for prio in sorted(self._lanes, reverse=True):
+                    lane = self._lanes[prio]
+                    while lane:
+                        req, frame = lane.popleft()
+                        self._lane_cv.notify_all()  # lane freed a slot
+                        if (req.deadline_s is not None
+                                and now > req.deadline_s):
+                            self._drop_expired(req)
+                            continue
+                        return req, frame
+                remaining = deadline - now
+                if remaining <= 0 or self._closing.is_set():
+                    return None
+                self._lane_cv.wait(timeout=remaining)
+
+    def _drop_expired(self, req: ServedRequest) -> None:
+        req._expire()
+        with self._lock:
+            self.stats.expired += 1
+            self.stats.klass(req.klass).expired += 1
+            self.stats._t_last = req.t_done
+
     def _run(self) -> None:
         while True:
-            try:
-                first = self._q.get(timeout=0.01)
-            except queue.Empty:
+            nxt = self._pop_next(timeout=0.01)
+            if nxt is None:
                 if self._closing.is_set():
+                    # Final drain: anything a racing submit() slipped in
+                    # before _closing was set is still in the lanes.
+                    while (nxt := self._pop_next(timeout=0.0)) is not None:
+                        self._assemble(nxt)
                     return
                 # Idle: collect finished micro-batches the single-jit
                 # executor is holding (no-op for the pipeline, whose
@@ -242,44 +527,91 @@ class AsyncFrontend:
                 if flush is not None:
                     flush()
                 continue
-            batch = [first]
-            deadline = first[0].t_submit + self.max_wait_s
-            timed_out = False
-            while len(batch) < self.batch_size:
-                if self._closing.is_set():
-                    break
-                now = time.perf_counter()
-                if now >= deadline:
-                    timed_out = True
-                    break
-                try:
-                    batch.append(self._q.get(
-                        timeout=min(deadline - now, 0.05)))
-                except queue.Empty:
-                    continue
-            self._dispatch(batch, timed_out)
+            self._assemble(nxt)
 
-    def _dispatch(self, batch, timed_out: bool) -> None:
-        """Hand one assembled micro-batch to the executor. A dispatch
-        failure (e.g. the pipeline died) resolves this batch's requests
-        with the error instead of killing the batcher thread — later
-        requests still get answers (more errors, most likely), and
-        close() still converges."""
-        reqs = tuple(r for r, _ in batch)
+    def _assemble(self, first: tuple) -> None:
+        """Grow a micro-batch from ``first`` until batch_size, the
+        max_wait timeout, or — the expedited flush — the tightest member
+        deadline, then dispatch it."""
+        batch = [first]
+        first[0].t_batched = time.perf_counter()
+        flush_at = first[0].t_submit + self.max_wait_s
+        # Holding the batch into a member's deadline would turn a
+        # servable request into a drop; flush with guard margin instead.
+        urgent_at = _urgent_at(first[0])
+        reason = "full"
+
+        def take(nxt) -> None:
+            nonlocal urgent_at
+            nxt[0].t_batched = time.perf_counter()
+            batch.append(nxt)
+            urgent_at = min(urgent_at, _urgent_at(nxt[0]))
+
+        while len(batch) < self.batch_size:
+            # Fill from the queued backlog before honoring any flush
+            # timer: once lane wait exceeds max_wait the timer is
+            # permanently expired, and flushing ahead of a non-empty
+            # lane would collapse a backlogged frontend into padded
+            # 1-frame batches (service rate / batch_size).
+            nxt = self._pop_next(timeout=0.0)
+            if nxt is not None:
+                take(nxt)
+                continue
+            if self._closing.is_set():
+                reason = "timeout"
+                break
+            now = time.perf_counter()
+            if now >= urgent_at:
+                reason = "deadline"
+                break
+            if now >= flush_at:
+                reason = "timeout"
+                break
+            nxt = self._pop_next(
+                timeout=min(flush_at - now, urgent_at - now, 0.05))
+            if nxt is not None:
+                take(nxt)
+        self._dispatch(batch, reason)
+
+    def _dispatch(self, batch, reason: str) -> None:
+        """Hand one assembled micro-batch to the executor. Members whose
+        deadline passed during assembly are dropped here (the
+        assembly-phase SLO miss). A dispatch failure (e.g. the pipeline
+        died) resolves this batch's requests with the error instead of
+        killing the batcher thread — later requests still get answers
+        (more errors, most likely), and close() still converges."""
+        now = time.perf_counter()
+        live = []
+        for r, f in batch:
+            if r.deadline_s is not None and now > r.deadline_s:
+                self._drop_expired(r)
+            else:
+                live.append((r, f))
+        if not live:
+            return
+        reqs = tuple(r for r, _ in live)
+        t_disp = time.perf_counter()
+        for r in reqs:
+            r.t_dispatched = t_disp
         with self._lock:
             self.stats.batches += 1
             if len(batch) >= self.batch_size:
                 self.stats.flushes_full += 1
-            elif timed_out:
+            elif reason == "deadline":
+                self.stats.flushes_deadline += 1
+            else:
                 self.stats.flushes_timeout += 1
         try:
-            frames = np.stack([f for _, f in batch])
+            frames = np.stack([f for _, f in live])
             self.executor.submit_batch(frames, len(frames), tag=reqs)
         except BaseException as e:  # noqa: BLE001 - resolved per request
-            with self._lock:
-                self.stats.failed += len(reqs)
             for r in reqs:
                 r._fail(e)
+            with self._lock:
+                self.stats.failed += len(reqs)
+                for r in reqs:
+                    self.stats.klass(r.klass).failed += 1
+                    self.stats._t_last = r.t_done
 
     # -- completion (runs on the executor's collector thread) ----------------
 
@@ -288,12 +620,24 @@ class AsyncFrontend:
         with self._lock:
             for i, req in enumerate(tag):
                 req._resolve(outputs[i])
+                cs = self.stats.klass(req.klass)
                 self.stats.completed += 1
+                cs.completed += 1
+                if req.deadline_s is not None and now > req.deadline_s:
+                    cs.late += 1
                 self.stats.latencies_s.append(now - req.t_submit)
+                ph = req.phase_s()
+                cs.queueing_s.append(ph["queueing"])
+                cs.assembly_s.append(ph["assembly"])
+                cs.compute_s.append(ph["compute"])
+                cs.total_s.append(now - req.t_submit)
             self.stats._t_last = now
 
     def _on_error(self, tag, exc: BaseException) -> None:
-        with self._lock:
-            self.stats.failed += len(tag)
         for req in tag:
             req._fail(exc)
+        with self._lock:
+            self.stats.failed += len(tag)
+            for req in tag:
+                self.stats.klass(req.klass).failed += 1
+            self.stats._t_last = time.perf_counter()

@@ -23,8 +23,26 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax
+
 from repro.core.allocator import LayerAlloc, _partition_min_max
 from repro.core.program import EngineProgram
+
+
+def stage_devices(n_stages: int,
+                  devices: Sequence | None = None) -> list:
+    """Round-robin device assignment for K stages: stage i runs on
+    ``devices[i % len(devices)]`` (default ``jax.devices()``) — each
+    balanced stage gets its own accelerator when the backend has several,
+    the software form of resource-partitioned multi-accelerator serving.
+    On a single-device backend every stage maps to that device, so
+    placement is transparent (same arithmetic, same buffers)."""
+    if n_stages < 1:
+        raise ValueError(f"n_stages={n_stages} < 1")
+    devs = list(jax.devices() if devices is None else devices)
+    if not devs:
+        raise ValueError("no devices to place stages on")
+    return [devs[i % len(devs)] for i in range(n_stages)]
 
 
 def step_cycles(allocs: Sequence[LayerAlloc]) -> dict[str, float]:

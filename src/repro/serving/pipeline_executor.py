@@ -37,7 +37,7 @@ from repro.core.executor import (ServeStats, normalize_frames,
                                  pad_micro_batch)
 from repro.core.program import CompiledRunner, EngineProgram
 from repro.serving.partition import (partition_from_boundaries,
-                                     partition_program)
+                                     partition_program, stage_devices)
 
 # Inter-stage queue depth: two mirrors the paper's double-buffered
 # activation memory (one micro-batch in flight, one staged).
@@ -67,6 +67,7 @@ class PipelineExecutor:
                  route: str | None = None, interpret: bool | None = None,
                  donate: bool | None = None, output: str = "top1",
                  queue_depth: int = DEFAULT_QUEUE_DEPTH,
+                 place_stages: bool = False,
                  on_result: Callable[[object, np.ndarray], None] | None = None,
                  on_error: Callable[[object, BaseException], None] | None = None):
         if output not in ("top1", "logits"):
@@ -84,10 +85,20 @@ class PipelineExecutor:
             self.partition = partition_from_boundaries(program, boundaries)
         else:
             self.partition = partition_program(program, stages)
+        # place_stages pins stage i to jax.devices()[i % n] so K-stage
+        # pipelining buys real concurrency on a multi-device backend
+        # (stages stop competing for one chip); transparent on a
+        # single-device backend, where every stage lands on the same
+        # device and the arithmetic is unchanged.
+        self.stage_devices = (
+            stage_devices(self.partition.n_stages) if place_stages
+            else [None] * self.partition.n_stages)
         self.runners: list[CompiledRunner] = [
             program.compile_stage_runner(b, e, route=route,
-                                         interpret=interpret, donate=donate)
-            for b, e in self.partition.stage_ranges()]
+                                         interpret=interpret, donate=donate,
+                                         device=dev)
+            for (b, e), dev in zip(self.partition.stage_ranges(),
+                                   self.stage_devices)]
         self.route = self.runners[0].route
         self.stats = ServeStats()
         self.stats._first_n = self.batch_size

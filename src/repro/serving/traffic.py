@@ -1,0 +1,160 @@
+"""Seeded synthetic traffic: mixed-class arrival schedules + replay.
+
+Every serving benchmark needs the same thing — an open-loop request
+stream at a target rate, with each request assigned a traffic class —
+and before this module each bench rolled its own pacing loop. Here it is
+once, seeded and recorded, so ``BENCH_serve_async.json`` and
+``BENCH_serve_qos.json`` are reproducible from the artifact alone:
+
+* :class:`TrafficClass` names one class of requests: a priority lane, an
+  optional per-request deadline, and its share of the arrival mix;
+* :func:`make_schedule` draws a deterministic arrival schedule — paced
+  inter-arrival times (optionally exponential, i.e. Poisson arrivals)
+  and a class per request — from one ``numpy`` RNG seed;
+* :func:`replay` submits a frame stream through an
+  :class:`~repro.serving.frontend.AsyncFrontend` following a schedule,
+  sleeping out each inter-arrival gap, and waits for every request to
+  resolve (completed, failed, or expired — expired requests raise out
+  of ``result()`` and are counted, never re-raised here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.serving.frontend import AsyncFrontend, ServedRequest
+
+# The canonical two-class mix the QoS bench and launcher default to:
+# a latency-sensitive interactive slice over a best-effort bulk floor.
+DEFAULT_SLO_MS = 250.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficClass:
+    """One traffic class: lane priority, per-request deadline (None =
+    best-effort, never dropped), and share of the arrival mix."""
+
+    name: str
+    priority: int = 0
+    deadline_ms: float | None = None
+    share: float = 1.0
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "priority": self.priority,
+                "deadline_ms": self.deadline_ms, "share": self.share}
+
+
+def default_mix(slo_ms: float = DEFAULT_SLO_MS) -> tuple[TrafficClass, ...]:
+    """interactive (priority 1, deadline ``slo_ms``, 25% of arrivals)
+    over batch (priority 0, best-effort, 75%)."""
+    return (TrafficClass("interactive", priority=1, deadline_ms=slo_ms,
+                         share=0.25),
+            TrafficClass("batch", priority=0, deadline_ms=None, share=0.75))
+
+
+def parse_traffic_mix(spec: str,
+                      slo_ms: float | None = None) -> tuple[TrafficClass, ...]:
+    """Parse ``name:priority:share[:deadline_ms]`` comma-separated, e.g.
+    ``interactive:1:0.25:50,batch:0:0.75`` (omitted/'-' deadline =
+    best-effort; 'slo' = use ``slo_ms``, which must then be given — a
+    silent 0 ms fallback would expire the whole class at submit).
+    Shares are normalized."""
+    classes = []
+    for part in spec.split(","):
+        fields = part.strip().split(":")
+        if not 3 <= len(fields) <= 4:
+            raise ValueError(
+                f"traffic-mix entry {part!r} is not "
+                f"name:priority:share[:deadline_ms]")
+        name, prio, share = fields[0], int(fields[1]), float(fields[2])
+        deadline: float | None = None
+        if len(fields) == 4 and fields[3] not in ("", "-", "none"):
+            if fields[3] == "slo":
+                if slo_ms is None or slo_ms <= 0:
+                    raise ValueError(
+                        f"traffic-mix entry {part!r} uses the 'slo' "
+                        f"deadline token but no --slo-ms was given")
+                deadline = slo_ms
+            else:
+                deadline = float(fields[3])
+        classes.append(TrafficClass(name, priority=prio,
+                                    deadline_ms=deadline, share=share))
+    total = sum(c.share for c in classes)
+    if total <= 0:
+        raise ValueError(f"traffic mix {spec!r} has no positive share")
+    return tuple(dataclasses.replace(c, share=c.share / total)
+                 for c in classes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled request: submit at ``t`` seconds after stream
+    start, frame ``frame_idx`` of the stream, as class ``klass``."""
+
+    t: float
+    frame_idx: int
+    klass: TrafficClass
+
+
+def make_schedule(n: int, rate_fps: float,
+                  classes: Sequence[TrafficClass] | None = None, *,
+                  seed: int = 0, poisson: bool = False) -> list[Arrival]:
+    """Deterministic arrival schedule for ``n`` requests at ``rate_fps``.
+
+    Class assignment is drawn per request from the mix shares; arrivals
+    are uniformly paced at ``1/rate`` (or exponential inter-arrival gaps
+    of the same mean with ``poisson=True`` — the bursty open-loop case).
+    Everything comes from one ``np.random.default_rng(seed)``, so a
+    recorded ``(n, rate, mix, seed, poisson)`` tuple replays the exact
+    same stream.
+    """
+    if n < 0:
+        raise ValueError(f"n={n} < 0")
+    if classes is None:
+        classes = default_mix()
+    rng = np.random.default_rng(seed)
+    shares = np.asarray([c.share for c in classes], dtype=np.float64)
+    shares = shares / shares.sum()
+    which = rng.choice(len(classes), size=n, p=shares)
+    period = 1.0 / rate_fps if rate_fps > 0 else 0.0
+    if poisson and period > 0:
+        gaps = rng.exponential(scale=period, size=n)
+        times = np.cumsum(gaps) - gaps[0] if n else np.zeros(0)
+    else:
+        times = np.arange(n) * period
+    return [Arrival(t=float(times[i]), frame_idx=i,
+                    klass=classes[int(which[i])]) for i in range(n)]
+
+
+def replay(frontend: AsyncFrontend, frames: np.ndarray,
+           schedule: Sequence[Arrival], *,
+           result_timeout: float = 600.0) -> list[ServedRequest]:
+    """Submit ``frames`` through ``frontend`` following ``schedule``
+    (open loop: each request goes in at its scheduled offset, late or
+    not), then wait for every request to resolve. Returns the request
+    handles in schedule order. An ``expired`` request is a resolved
+    handle (drop-on-SLO-miss is expected QoS behaviour — read
+    ``req.outcome``), but a ``failed`` one re-raises its serving error:
+    a broken pipeline must fail the bench, not quietly thin out the
+    percentile samples."""
+    t0 = time.perf_counter()
+    reqs: list[ServedRequest] = []
+    for a in schedule:
+        delay = (t0 + a.t) - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        reqs.append(frontend.submit(
+            frames[a.frame_idx], priority=a.klass.priority,
+            deadline_ms=a.klass.deadline_ms, klass=a.klass.name))
+    deadline = time.perf_counter() + result_timeout
+    for r in reqs:
+        if not r._event.wait(timeout=max(0.0, deadline - time.perf_counter())):
+            raise TimeoutError("replayed request did not resolve")
+    for r in reqs:
+        if r.outcome == "failed":
+            r.result(timeout=0)         # re-raises the serving error
+    return reqs

@@ -171,6 +171,64 @@ def test_partition_optimal(weights, k):
         assert cost <= best + 1e-6
 
 
+def _brute_min_max(weights, k):
+    """Exhaustive minimum of the max stage sum over ALL contiguous
+    k-compositions of ``weights`` (every part non-empty)."""
+    import itertools
+    n = len(weights)
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        bs = [0, *cuts, n]
+        best = min(best, max(sum(weights[bs[i]:bs[i + 1]])
+                             for i in range(k)))
+    return best
+
+
+def _check_partition_exact(weights, k):
+    """The serving-partition contract on the DP: boundaries are a
+    strictly increasing contiguous cover of [0, n], the returned cost is
+    the max stage sum of those boundaries, and that cost is *optimal* —
+    equal to the brute force over all compositions. This pins
+    Algorithm 1's balance objective independently of the allocator and
+    of ``repro.serving.partition`` (both consume this one DP)."""
+    bounds, cost = _partition_min_max(weights, k)
+    assert len(bounds) == k + 1
+    assert bounds[0] == 0 and bounds[-1] == len(weights)
+    assert all(b < e for b, e in zip(bounds, bounds[1:]))  # contiguous,
+    # non-empty stages; together with the 0..n endpoints: exhaustive.
+    got = max(sum(weights[bounds[i]:bounds[i + 1]]) for i in range(k))
+    assert got == pytest.approx(cost, rel=1e-9, abs=1e-9)
+    assert cost == pytest.approx(_brute_min_max(weights, k),
+                                 rel=1e-9, abs=1e-9)
+
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=1, max_size=12),
+       st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_partition_min_max_property(weights, k):
+    """Random weight vectors (n <= 12, zeros included — pool steps weigh
+    nothing), K <= n: the DP's cost matches brute force exactly."""
+    _check_partition_exact(weights, min(k, len(weights)))
+
+
+def test_partition_min_max_fixed_cases():
+    """Deterministic fallback for test_partition_min_max_property: a
+    seeded sweep over sizes, stage counts, and zero-weight densities."""
+    import numpy as np
+    rng = np.random.default_rng(20260730)
+    for n in (1, 2, 3, 5, 8, 12):
+        for zero_frac in (0.0, 0.3):
+            w = rng.uniform(0.1, 100.0, size=n)
+            w[rng.uniform(size=n) < zero_frac] = 0.0
+            for k in sorted(k for k in {1, 2, max(1, n // 2), n}
+                            if k <= n):
+                _check_partition_exact(list(w), k)
+    # Adversarial hand cases: equal weights, one dominant, all zero.
+    _check_partition_exact([5.0] * 6, 3)
+    _check_partition_exact([1.0, 1.0, 100.0, 1.0, 1.0], 2)
+    _check_partition_exact([0.0, 0.0, 0.0], 2)
+
+
 def test_plan_pipeline_basic():
     from repro.configs import ARCHS
     from repro.core.workload import lm_layer_workloads

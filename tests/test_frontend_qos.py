@@ -1,0 +1,374 @@
+"""QoS frontend: priority lanes, deadlines, drop-on-SLO-miss, the four
+request timestamps, per-class phase-split stats, and the seeded traffic
+generator. The acceptance pins: a low-priority flood cannot starve
+high-priority requests past their deadline, and an expired request
+resolves with the ``expired`` outcome instead of hanging."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import (AsyncFrontend, DeadlineExpired, RequestRejected,
+                           TrafficClass, default_mix, make_schedule,
+                           parse_traffic_mix, replay)
+
+
+class EchoExecutor:
+    """Fake executor: optional fixed service time per batch, echoes each
+    frame back as its result, records dispatch order. Deterministic —
+    no device, no jit."""
+
+    def __init__(self, batch_size=4, delay_s=0.0):
+        self.batch_size = batch_size
+        self.delay_s = delay_s
+        self.on_result = None
+        self.dispatched = []        # list of tag tuples, in arrival order
+
+    def submit_batch(self, frames, n_valid, tag=None):
+        self.dispatched.append(tag)
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if self.on_result:
+            self.on_result(tag, [f.copy() for f in frames[:n_valid]])
+
+
+class GateExecutor(EchoExecutor):
+    """EchoExecutor that blocks each submit_batch until released —
+    batches complete exactly when the test says so."""
+
+    def __init__(self, batch_size=4):
+        super().__init__(batch_size)
+        self.gate = threading.Semaphore(0)
+
+    def submit_batch(self, frames, n_valid, tag=None):
+        assert self.gate.acquire(timeout=30)
+        super().submit_batch(frames, n_valid, tag)
+
+
+FRAME = np.zeros((2, 2, 1), np.float32)
+
+
+def _frames(n, base=0):
+    return [np.full((2, 2, 1), base + i, np.float32) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Outcomes
+# ---------------------------------------------------------------------------
+
+
+def test_expired_request_resolves_with_expired_outcome():
+    """A request whose deadline passes while queued is dropped: outcome
+    'expired', result() raises DeadlineExpired, nothing hangs, and the
+    stats reconcile exactly."""
+    ex = GateExecutor(batch_size=1)
+    fe = AsyncFrontend(ex, max_wait_ms=5.0)
+    blocker = fe.submit(FRAME)                  # occupies the executor
+    time.sleep(0.05)                            # batcher blocks on gate
+    doomed = fe.submit(FRAME, deadline_ms=1.0)  # expires while queued
+    time.sleep(0.05)
+    ex.gate.release()
+    blocker.result(timeout=10)
+    with pytest.raises(DeadlineExpired):
+        doomed.result(timeout=10)
+    assert doomed.outcome == "expired"
+    assert doomed.expired() and doomed.missed_deadline()
+    assert doomed.t_dispatched is None          # never reached the engine
+    fe.close()
+    st = fe.stats
+    assert st.expired == 1 and st.completed == 1
+    assert st.resolved == st.submitted == 2
+    assert st.klass("p0").expired == 1
+
+
+def test_rejected_outcome_on_full_lane_nonblocking():
+    """block=False on a full lane load-sheds: the request comes back
+    already resolved 'rejected' and result() raises RequestRejected."""
+    ex = GateExecutor(batch_size=2)
+    fe = AsyncFrontend(ex, max_wait_ms=5.0, max_queue=2)
+    reqs = [fe.submit(FRAME) for _ in range(2)]   # claimed by the batcher
+    time.sleep(0.05)
+    reqs += [fe.submit(FRAME) for _ in range(2)]  # fills the p0 lane
+    shed = fe.submit(FRAME, block=False)
+    assert shed.outcome == "rejected"
+    with pytest.raises(RequestRejected):
+        shed.result(timeout=1)
+    for _ in range(3):
+        ex.gate.release()
+    for r in reqs:
+        r.result(timeout=10)
+    fe.close()
+    assert fe.stats.rejected == 1
+    assert fe.stats.resolved == fe.stats.submitted == 5
+
+
+def test_full_lane_still_blocks_by_default():
+    """The PR-3 backpressure contract is unchanged: a blocking submit on
+    a full lane raises queue.Full when its timeout expires."""
+    import queue as queue_mod
+    ex = GateExecutor(batch_size=2)
+    fe = AsyncFrontend(ex, max_wait_ms=5.0, max_queue=2)
+    reqs = [fe.submit(FRAME) for _ in range(2)]
+    time.sleep(0.05)
+    reqs += [fe.submit(FRAME) for _ in range(2)]
+    with pytest.raises(queue_mod.Full):
+        fe.submit(FRAME, timeout=0.05)
+    for _ in range(3):
+        ex.gate.release()
+    for r in reqs:
+        r.result(timeout=10)
+    fe.close()
+
+
+# ---------------------------------------------------------------------------
+# Priority lanes + starvation
+# ---------------------------------------------------------------------------
+
+
+def test_priority_lanes_dispatch_high_first():
+    """With both lanes populated, the next assembled batch drains the
+    high-priority lane before touching the low one."""
+    ex = GateExecutor(batch_size=4)
+    fe = AsyncFrontend(ex, max_wait_ms=20.0)
+    lo_first = [fe.submit(f, priority=0) for f in _frames(4)]
+    time.sleep(0.05)        # batcher claims the first lo batch, blocks
+    lo_rest = [fe.submit(f, priority=0) for f in _frames(4, base=10)]
+    hi = [fe.submit(f, priority=1) for f in _frames(4, base=100)]
+    for _ in range(3):
+        ex.gate.release()
+    for r in lo_first + lo_rest + hi:
+        r.result(timeout=10)
+    fe.close()
+    assert len(ex.dispatched) == 3
+    assert [r.priority for r in ex.dispatched[1]] == [1, 1, 1, 1]
+    assert [r.priority for r in ex.dispatched[2]] == [0, 0, 0, 0]
+
+
+def test_low_priority_flood_cannot_starve_high_past_deadline():
+    """The pinned QoS guarantee: under a saturating best-effort flood,
+    deadline-armed high-priority requests still complete inside their
+    deadline (priority lanes + expedited flush), while every flood
+    request still resolves eventually."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.05)
+    fe = AsyncFrontend(ex, max_wait_ms=10.0)
+    # 40 best-effort frames = 10 batches = ~500ms of queued work, so
+    # FIFO service would answer a later arrival well past the 450ms
+    # deadline the high class carries; the priority lane must not.
+    flood = [fe.submit(f, priority=0, klass="lo") for f in _frames(40)]
+    time.sleep(0.02)        # flood is queued ahead
+    hi = [fe.submit(f, priority=2, deadline_ms=450.0, klass="hi")
+          for f in _frames(4, base=100)]
+    for r in hi:
+        out = r.result(timeout=10)   # completes — never expired
+        assert r.outcome == "completed"
+        assert not r.missed_deadline()
+        np.testing.assert_array_equal(out, np.full((2, 2, 1),
+                                                   100 + hi.index(r)))
+    fe.close()
+    st = fe.stats
+    assert st.resolved == st.submitted == 44
+    assert st.klass("hi").completed == 4
+    assert st.klass("hi").late == 0 and st.klass("hi").expired == 0
+    assert st.klass("lo").completed == 40    # flood still fully served
+
+
+def test_backlogged_frontend_dispatches_full_batches():
+    """Once lane wait exceeds max_wait_ms the flush timer is permanently
+    expired; the batcher must still fill batches from the queued backlog
+    instead of timeout-flushing padded singletons (which would collapse
+    the service rate by batch_size x)."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.05)
+    fe = AsyncFrontend(ex, max_wait_ms=10.0, max_queue=1024)
+    reqs = [fe.submit(f) for f in _frames(40)]
+    for r in reqs:
+        r.result(timeout=30)
+    fe.close()
+    sizes = [len(t) for t in ex.dispatched]
+    assert sizes.count(4) >= 9, f"dispatch sizes {sizes}"
+    assert fe.stats.flushes_full >= 9
+
+
+def test_rejected_best_effort_is_drop_not_slo_miss():
+    """Admission rejection of a deadline-less class counts in drop_rate
+    only — a class with no SLO cannot miss one."""
+    ex = GateExecutor(batch_size=2)
+    fe = AsyncFrontend(ex, max_wait_ms=5.0, max_queue=2)
+    reqs = [fe.submit(FRAME) for _ in range(2)]
+    time.sleep(0.05)
+    reqs += [fe.submit(FRAME) for _ in range(2)]
+    shed = fe.submit(FRAME, block=False)
+    assert shed.outcome == "rejected"
+    for _ in range(3):
+        ex.gate.release()
+    for r in reqs:
+        r.result(timeout=10)
+    fe.close()
+    cs = fe.stats.klass("default")
+    assert cs.rejected == 1 and not cs.armed
+    assert cs.drop_rate > 0.0
+    assert cs.slo_miss_rate == 0.0
+
+
+def test_starved_lane_request_still_expires_at_deadline():
+    """A deadline-armed request in a lane the batcher never drains
+    (sustained higher-priority traffic) must still resolve ``expired``
+    at its deadline — never block in result() until the flood abates."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.05)
+    fe = AsyncFrontend(ex, max_wait_ms=10.0)
+    # ~0.5s of high-priority work keeps lane 1 non-empty throughout.
+    flood = [fe.submit(f, priority=1, klass="hi") for f in _frames(40)]
+    starved = fe.submit(FRAME, priority=0, deadline_ms=100.0, klass="lo")
+    with pytest.raises(DeadlineExpired):
+        starved.result(timeout=10)
+    # Expired at ~deadline, not after the flood drained (~0.5s).
+    assert starved.latency_s < 0.4
+    for r in flood:
+        r.result(timeout=30)
+    fe.close()
+    assert fe.stats.klass("lo").expired == 1
+    assert fe.stats.resolved == fe.stats.submitted == 41
+
+
+def test_deadline_expedites_flush():
+    """A lone deadline-armed request in a quiet frontend must be flushed
+    at its deadline, not parked for the full max_wait window."""
+    ex = EchoExecutor(batch_size=8)
+    fe = AsyncFrontend(ex, max_wait_ms=10_000.0)
+    t0 = time.perf_counter()
+    req = fe.submit(FRAME, deadline_ms=100.0)
+    req.result(timeout=10)
+    elapsed = time.perf_counter() - t0
+    fe.close()
+    assert req.outcome == "completed"
+    assert elapsed < 5.0                     # nowhere near max_wait
+    assert fe.stats.flushes_deadline == 1
+    assert fe.stats.flushes_timeout == 0
+
+
+# ---------------------------------------------------------------------------
+# Timestamps + per-class stats
+# ---------------------------------------------------------------------------
+
+
+def test_four_timestamps_monotone_and_phase_split():
+    """t_submit <= t_batched <= t_dispatched <= t_done for a completed
+    request, and the phase split reassembles to the total latency."""
+    ex = EchoExecutor(batch_size=2, delay_s=0.01)
+    fe = AsyncFrontend(ex, max_wait_ms=20.0)
+    reqs = [fe.submit(f, priority=1, deadline_ms=5_000.0, klass="hi")
+            for f in _frames(2)]
+    for r in reqs:
+        r.result(timeout=10)
+    fe.close()
+    for r in reqs:
+        assert r.t_submit <= r.t_batched <= r.t_dispatched <= r.t_done
+        ph = r.phase_s()
+        assert all(v is not None and v >= 0 for v in ph.values())
+        total = ph["queueing"] + ph["assembly"] + ph["compute"]
+        assert total == pytest.approx(r.latency_s, abs=1e-6)
+
+
+def test_per_class_stats_reconcile_and_percentiles():
+    """Class rows partition the totals; phase percentiles come back per
+    class with p50 <= p95 <= p99."""
+    ex = EchoExecutor(batch_size=4)
+    fe = AsyncFrontend(ex, max_wait_ms=10.0)
+    for f in _frames(8):
+        fe.submit(f, priority=0, klass="bulk")
+    for f in _frames(4, base=50):
+        fe.submit(f, priority=1, deadline_ms=5_000.0, klass="rt")
+    while fe.stats.resolved < 12:
+        time.sleep(0.005)
+    fe.close()
+    st = fe.stats
+    assert set(st.classes) == {"bulk", "rt"}
+    assert st.klass("bulk").submitted == 8
+    assert st.klass("rt").submitted == 4
+    assert sum(cs.submitted for cs in st.classes.values()) == st.submitted
+    assert sum(cs.completed for cs in st.classes.values()) == st.completed
+    pp = st.phase_percentiles()
+    for name in ("bulk", "rt"):
+        for phase in ("queueing", "assembly", "compute", "total"):
+            row = pp[name][phase]
+            assert row["p50"] <= row["p95"] <= row["p99"]
+    assert st.klass("rt").slo_miss_rate == 0.0
+    assert st.klass("bulk").drop_rate == 0.0
+
+
+def test_legacy_submit_is_single_default_class():
+    """Plain submit() (no priority, no deadline) keeps the PR-3
+    behaviour: one best-effort class, nothing dropped, nothing late."""
+    ex = EchoExecutor(batch_size=4)
+    fe = AsyncFrontend(ex, max_wait_ms=10.0)
+    reqs = [fe.submit(f) for f in _frames(6)]
+    for r in reqs:
+        r.result(timeout=10)
+    fe.close()
+    assert set(fe.stats.classes) == {"default"}
+    assert fe.stats.expired == fe.stats.rejected == 0
+    assert not np.isnan(fe.stats.latency_percentiles()["p99"])
+
+
+# ---------------------------------------------------------------------------
+# Traffic generator (the one seeded stream every bench shares)
+# ---------------------------------------------------------------------------
+
+
+def test_make_schedule_deterministic_and_mixed():
+    mix = default_mix(slo_ms=100.0)
+    a = make_schedule(64, 200.0, mix, seed=7)
+    b = make_schedule(64, 200.0, mix, seed=7)
+    assert [(x.t, x.frame_idx, x.klass.name) for x in a] == \
+        [(x.t, x.frame_idx, x.klass.name) for x in b]
+    assert {x.klass.name for x in a} == {"interactive", "batch"}
+    # Uniform pacing at 200 fps: 5ms period, monotone offsets.
+    assert a[0].t == 0.0
+    assert all(y.t - x.t == pytest.approx(0.005)
+               for x, y in zip(a, a[1:]))
+    c = make_schedule(64, 200.0, mix, seed=8)
+    assert [x.klass.name for x in a] != [x.klass.name for x in c]
+    # Poisson arrivals: same seed reproduces, gaps vary.
+    d = make_schedule(64, 200.0, mix, seed=7, poisson=True)
+    e = make_schedule(64, 200.0, mix, seed=7, poisson=True)
+    assert [x.t for x in d] == [x.t for x in e]
+    gaps = {round(y.t - x.t, 6) for x, y in zip(d, d[1:])}
+    assert len(gaps) > 1
+
+
+def test_parse_traffic_mix():
+    mix = parse_traffic_mix("interactive:1:1:50,batch:0:3")
+    assert [c.name for c in mix] == ["interactive", "batch"]
+    assert mix[0].priority == 1 and mix[0].deadline_ms == 50.0
+    assert mix[1].deadline_ms is None
+    assert mix[0].share == pytest.approx(0.25)   # normalized 1:3
+    assert parse_traffic_mix("a:0:1:slo", slo_ms=77.0)[0].deadline_ms == 77.0
+    with pytest.raises(ValueError):
+        parse_traffic_mix("bad")
+    with pytest.raises(ValueError):
+        parse_traffic_mix("a:0:0,b:0:0")
+    with pytest.raises(ValueError):
+        parse_traffic_mix("a:0:1:slo")       # 'slo' needs an slo_ms
+    with pytest.raises(ValueError):
+        parse_traffic_mix("a:0:1:slo", slo_ms=0.0)
+
+
+def test_replay_resolves_every_request():
+    """replay() waits out expired/failed requests instead of raising —
+    handles come back with their outcomes readable."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.01)
+    fe = AsyncFrontend(ex, max_wait_ms=10.0)
+    mix = (TrafficClass("rt", priority=1, deadline_ms=2_000.0, share=0.5),
+           TrafficClass("bulk", priority=0, deadline_ms=None, share=0.5))
+    frames = np.stack(_frames(16))
+    schedule = make_schedule(16, 500.0, mix, seed=3)
+    reqs = replay(fe, frames, schedule)
+    fe.close()
+    assert len(reqs) == 16
+    assert all(r.done() for r in reqs)
+    assert fe.stats.resolved == fe.stats.submitted == 16
+    for a, r in zip(schedule, reqs):
+        assert r.klass == a.klass.name
+        if r.outcome == "completed":
+            np.testing.assert_array_equal(r.result(), frames[a.frame_idx])

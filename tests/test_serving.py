@@ -18,7 +18,7 @@ from repro.core.executor import EngineExecutor
 from repro.core.program import compile_model
 from repro.models import cnn
 from repro.serving import (AsyncFrontend, PipelineExecutor,
-                           partition_program, step_cycles)
+                           partition_program, stage_devices, step_cycles)
 
 
 def _tiny():
@@ -165,6 +165,48 @@ def test_pipelined_mid_block_boundary_bit_identical():
                               boundaries=bounds, output="logits") as px:
             got = np.stack(px.serve(list(frames)))
         np.testing.assert_array_equal(got, want, err_msg=str(bounds))
+
+
+def test_stage_devices_round_robin():
+    """Placement policy: stage i -> devices[i % n], default jax.devices(),
+    bad inputs refused."""
+    devs = jax.devices()
+    assert stage_devices(3) == [devs[i % len(devs)] for i in range(3)]
+    fake = ["d0", "d1"]
+    assert stage_devices(5, fake) == ["d0", "d1", "d0", "d1", "d0"]
+    with pytest.raises(ValueError):
+        stage_devices(0)
+    with pytest.raises(ValueError):
+        stage_devices(2, [])
+
+
+@pytest.mark.parametrize("route", ["f32", "oracle", "kernel"])
+def test_placed_stage_runners_bit_identical_all_routes(route):
+    """--place-stages determinism: with every stage pinned to a device
+    (all the same one on single-device CPU), K in {1, 2, 4} placed
+    pipelines stay bit-identical to the monolithic compile_runner on
+    every MAC route — placement moves buffers, never arithmetic."""
+    prog, frames = _two_block()
+    want = prog.compile_runner(route=route).logits(frames)
+    for k in (1, 2, 4):
+        with PipelineExecutor(prog, stages=k, batch_size=4, route=route,
+                              place_stages=True, output="logits") as px:
+            got = np.stack(px.serve(list(frames)))
+        np.testing.assert_array_equal(got, want, err_msg=f"K={k}")
+        assert len(px.stage_devices) == k
+        assert all(d is not None for d in px.stage_devices)
+
+
+def test_placed_runner_device_pin_single_runner():
+    """compile_stage_runner(device=...) routes execution through the
+    pinned device and stays bit-identical to the unpinned runner."""
+    prog, frames = _tiny()
+    dev = jax.devices()[0]
+    pinned = prog.compile_stage_runner(0, len(prog.steps), device=dev)
+    plain = prog.compile_runner()
+    np.testing.assert_array_equal(pinned.logits(frames), plain.logits(frames))
+    out = pinned(pinned.quantize(frames[:4]))
+    assert next(iter(out.devices())) == dev
 
 
 def test_pipeline_reuse_across_drains():

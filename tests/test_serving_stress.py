@@ -1,0 +1,146 @@
+"""Multi-producer stress lane for the QoS frontend (``stress`` marker;
+``make test-stress``, warn-only CI step).
+
+8 submitter threads x 64 frames each against a deliberately slow fake
+executor: no request may ever hang, each producer's results must come
+back in its own submission order (per-producer FIFO), every request must
+resolve to its *own* frame, and the FrontendStats outcome counts must
+reconcile exactly with the submissions — completed + failed + expired
+(+ rejected) == submitted, totals and per-class alike."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import AsyncFrontend
+
+N_PRODUCERS = 8
+N_FRAMES = 64
+
+pytestmark = pytest.mark.stress
+
+
+class SlowEchoExecutor:
+    """Deterministic fake: fixed service time per micro-batch, echoes
+    each frame back as its result (so a request's payload identifies the
+    frame it was answered with)."""
+
+    def __init__(self, batch_size=16, delay_s=0.002):
+        self.batch_size = batch_size
+        self.delay_s = delay_s
+        self.on_result = None
+        self.batches = 0
+
+    def submit_batch(self, frames, n_valid, tag=None):
+        self.batches += 1
+        time.sleep(self.delay_s)
+        if self.on_result:
+            self.on_result(tag, [f.copy() for f in frames[:n_valid]])
+
+
+def _frame(producer: int, i: int) -> np.ndarray:
+    """A frame whose payload encodes (producer, sequence)."""
+    return np.full((2, 2, 1), producer * 1000 + i, np.float32)
+
+
+def _run_producers(fe, submit_one):
+    """Spawn N_PRODUCERS threads, each submitting N_FRAMES requests via
+    ``submit_one(producer, i)``; returns per-producer request lists."""
+    reqs = [[None] * N_FRAMES for _ in range(N_PRODUCERS)]
+    errors = []
+
+    def producer(p):
+        try:
+            for i in range(N_FRAMES):
+                reqs[p][i] = submit_one(p, i)
+        except BaseException as e:  # noqa: BLE001 - surfaced to the test
+            errors.append((p, e))
+
+    threads = [threading.Thread(target=producer, args=(p,))
+               for p in range(N_PRODUCERS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer thread hung"
+    assert not errors, f"producer raised: {errors}"
+    return reqs
+
+
+def test_multi_producer_no_hang_fifo_and_reconciled_stats():
+    ex = SlowEchoExecutor(batch_size=16, delay_s=0.002)
+    fe = AsyncFrontend(ex, max_wait_ms=20.0, max_queue=1024)
+    reqs = _run_producers(
+        fe, lambda p, i: fe.submit(_frame(p, i), timeout=30))
+
+    # No request hangs: every one resolves inside a bounded wait.
+    for p in range(N_PRODUCERS):
+        for r in reqs[p]:
+            assert r._event.wait(timeout=60), "request hung"
+    fe.close()
+
+    total = N_PRODUCERS * N_FRAMES
+    st = fe.stats
+    # Exact reconciliation: all outcomes, no deadline traffic here.
+    assert st.submitted == total
+    assert st.completed == total
+    assert st.failed == st.expired == st.rejected == 0
+    assert st.resolved == total
+    assert sum(cs.submitted for cs in st.classes.values()) == total
+    assert sum(cs.completed for cs in st.classes.values()) == total
+
+    for p in range(N_PRODUCERS):
+        for i, r in enumerate(reqs[p]):
+            # Every request got its own frame's answer...
+            np.testing.assert_array_equal(
+                np.asarray(r.result(timeout=1)),
+                _frame(p, i))
+            # ...with monotone timestamps through the frontend.
+            assert r.t_submit <= r.t_batched <= r.t_dispatched <= r.t_done
+        # Per-producer FIFO: a producer's requests are batched and
+        # resolved in its own submission order (lanes are FIFO, batches
+        # dispatch in pop order, the executor is FIFO).
+        for a, b in zip(reqs[p], reqs[p][1:]):
+            assert a.t_batched <= b.t_batched
+            assert a.t_done <= b.t_done
+
+
+def test_multi_producer_mixed_deadlines_reconcile():
+    """Same flood, but half the producers arm tight deadlines: expired
+    requests must resolve (never hang) and the outcome counts still
+    reconcile exactly — completed + expired == submitted."""
+    ex = SlowEchoExecutor(batch_size=16, delay_s=0.005)
+    fe = AsyncFrontend(ex, max_wait_ms=20.0, max_queue=1024)
+
+    def submit_one(p, i):
+        if p % 2 == 0:
+            return fe.submit(_frame(p, i), timeout=30, klass="bulk")
+        return fe.submit(_frame(p, i), priority=1, deadline_ms=150.0,
+                         timeout=30, klass="rt")
+
+    reqs = _run_producers(fe, submit_one)
+    for p in range(N_PRODUCERS):
+        for r in reqs[p]:
+            assert r._event.wait(timeout=60), "request hung"
+    fe.close()
+
+    total = N_PRODUCERS * N_FRAMES
+    st = fe.stats
+    assert st.submitted == total
+    assert st.failed == st.rejected == 0
+    assert st.completed + st.expired == total
+    assert st.resolved == total
+    bulk, rt = st.klass("bulk"), st.klass("rt")
+    assert bulk.submitted == rt.submitted == total // 2
+    assert bulk.expired == 0 and bulk.completed == bulk.submitted
+    assert rt.completed + rt.expired == rt.submitted
+    # Every rt request resolved one way or the other, with a value only
+    # when completed.
+    for p in range(1, N_PRODUCERS, 2):
+        for i, r in enumerate(reqs[p]):
+            assert r.outcome in ("completed", "expired")
+            if r.outcome == "completed":
+                np.testing.assert_array_equal(
+                    np.asarray(r.result(timeout=1)), _frame(p, i))
