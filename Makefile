@@ -12,22 +12,34 @@ test-fast:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q -m "not slow and not stress"
 
 # Multi-producer stress lane (8 submitter threads x 64 frames etc.).
+# Blocking in CI: each test gets a hard timeout (when pytest-timeout is
+# installed — requirements-dev.txt; probed so a bare container without
+# it still runs the lane), and a failed run gets exactly one retry of
+# the failed tests — shared two-core runners can starve 8 submitter
+# threads once, but a real regression fails twice.
+STRESS_TIMEOUT := $(shell $(PYTHON) -c "import pytest_timeout" 2>/dev/null \
+	&& echo --timeout=120 --timeout-method=thread)
 .PHONY: test-stress
 test-stress:
-	PYTHONPATH=src $(PYTHON) -m pytest -q -m stress
+	PYTHONPATH=src $(PYTHON) -m pytest -q -m stress $(STRESS_TIMEOUT) \
+		|| PYTHONPATH=src $(PYTHON) -m pytest -q -m stress --last-failed \
+			$(STRESS_TIMEOUT)
 
 .PHONY: bench
 bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py all
 
-# Exactly what the CI bench-smoke job runs (AlexNet-only, small batch).
+# Exactly what the CI bench-smoke job runs (AlexNet-only, small batch):
+# build all four artifacts, schema-validate them, and gate against the
+# committed reference bands in benchmarks/baselines/.
 .PHONY: bench-quick
 bench-quick:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_bench.py --quick --out BENCH_serve.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --quick --out BENCH_serve_async.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --quick --out BENCH_serve_qos.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --quick --out BENCH_serve_knee.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
-	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py --baseline benchmarks/baselines BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json
 
 # Full async serving sweep (all four models, K in {1,2,4}, batch 32).
 .PHONY: bench-async
@@ -40,6 +52,12 @@ bench-async:
 bench-qos:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --out BENCH_serve_qos.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_qos.json
+
+# Full QPS-knee sweep (all four models; the headline capacity number).
+.PHONY: bench-knee
+bench-knee:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --out BENCH_serve_knee.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_knee.json
 
 .PHONY: lint
 lint:

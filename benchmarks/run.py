@@ -8,6 +8,9 @@
   serve-qos : mixed traffic classes at two arrival rates (per-class
               queueing/assembly/compute split, SLO miss + drop rates)
               -> BENCH_serve_qos.json
+  serve-knee : bracketing absolute-QPS sweep; the knee (max sustained
+              rate with interactive SLO miss < 1%) is the headline
+              capacity number -> BENCH_serve_knee.json
   ablation  : allocator objectives (paper greedy / exact / waterfill)
               + pipeline stage balance on the TPU mesh
   roofline  : three-term roofline per (arch x shape x mesh) cell
@@ -45,8 +48,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("which", nargs="?", default="all",
                     choices=("all", "table1", "serve", "serve-async",
-                             "serve-qos", "ablation", "roofline",
-                             "kernels"))
+                             "serve-qos", "serve-knee", "ablation",
+                             "roofline", "kernels"))
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI setting (AlexNet-only, small batch)")
     args = ap.parse_args(argv)
@@ -64,6 +67,9 @@ def main(argv=None) -> int:
     if only in ("all", "serve-qos"):
         from benchmarks import serve_qos_bench
         serve_qos_bench.run(emit, quick=args.quick)
+    if only in ("all", "serve-knee"):
+        from benchmarks import serve_knee_bench
+        serve_knee_bench.run(emit, quick=args.quick)
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run_objectives(emit)

@@ -1,0 +1,175 @@
+"""QPS-knee benchmark: the headline capacity number per model.
+
+``serve_qos_bench`` reports QoS behaviour at load factors *relative to*
+the measured steady throughput; this bench answers the absolute
+question — how many requests per second can a deployment take while the
+interactive class holds its SLO? For each model it compiles one
+:class:`EngineProgram`, measures steady pipeline throughput, then runs
+the bracketing absolute-QPS sweep (``repro.launch.serve_cnn.serve_knee``:
+double the arrival rate while the deadline-armed classes miss less than
+``--miss-target`` of the time, then bisect the sustained/unsustained
+bracket). The knee — max sustained QPS — lands in
+``BENCH_serve_knee.json`` with every probe recorded, the control-plane
+config (admission, flush guard, estimator warm start), and the seed
+that replays the exact schedule. Built, schema-validated, gated against
+``benchmarks/baselines/`` and uploaded by the CI bench-smoke job.
+
+  PYTHONPATH=src:. python benchmarks/serve_knee_bench.py --quick  # CI
+  PYTHONPATH=src:. python benchmarks/serve_knee_bench.py          # full
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+from repro.core import workload as W
+from repro.launch.serve_cnn import compile_for_serving, serve_knee
+from repro.serving import parse_traffic_mix
+
+SCHEMA_VERSION = 1
+DEFAULT_OUT = "BENCH_serve_knee.json"
+DEFAULT_MISS_TARGET = 0.01
+
+
+def bench_model(model: str, *, batch: int, frames: int | None,
+                stages: int, seed: int, slo_ms: float | None,
+                traffic_mix, miss_target: float, refine_iters: int,
+                max_factor: float, flush_guard_ms: float | None,
+                admission_control: bool, place_stages: bool,
+                poisson: bool) -> dict:
+    """One model: throughput phase + the bracketing QPS sweep, over one
+    compiled program."""
+    prog = compile_for_serving(model, bits=8, seed=seed)
+    n = frames if frames is not None else (6 + 2 * stages) * batch
+    return serve_knee(model, frames=n, batch=batch, stages=stages,
+                      seed=seed, slo_ms=slo_ms, traffic_mix=traffic_mix,
+                      miss_target=miss_target, refine_iters=refine_iters,
+                      max_factor=max_factor,
+                      flush_guard_ms=flush_guard_ms,
+                      admission_control=admission_control,
+                      place_stages=place_stages, poisson=poisson,
+                      program=prog, verbose=True)
+
+
+def run(emit, *, quick: bool = False, batch: int | None = None,
+        frames: int | None = None, out: str = DEFAULT_OUT,
+        models: list[str] | None = None, stages: int = 2,
+        seed: int = 0, slo_ms: float | None = None,
+        traffic_mix_spec: str | None = None,
+        miss_target: float = DEFAULT_MISS_TARGET,
+        refine_iters: int | None = None, max_factor: float = 8.0,
+        flush_guard_ms: float | None = None,
+        admission_control: bool = True,
+        place_stages: bool = False, poisson: bool = False) -> dict:
+    if models is None:
+        models = ["alexnet"] if quick else list(W.CNN_MODELS)
+    if batch is None:
+        batch = 8 if quick else 32
+    if refine_iters is None:
+        refine_iters = 2 if quick else 3
+    mix = (parse_traffic_mix(traffic_mix_spec, slo_ms)
+           if traffic_mix_spec else None)
+    data: dict = {
+        "schema_version": SCHEMA_VERSION,
+        "bench": "serve_knee",
+        "quick": quick,
+        "batch": batch,
+        "frames": frames,          # null = per-model default
+        "stages": stages,
+        "seed": seed,              # replays params, calibration, frames
+        "slo_ms": slo_ms,          # and every probe's arrival schedule
+        "poisson": poisson,
+        "miss_target": miss_target,
+        "max_factor": max_factor,
+        "refine_iters": refine_iters,
+        "admission_control": admission_control,
+        "flush_guard_ms": flush_guard_ms,
+        "place_stages": place_stages,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_version": jax.__version__,
+        "backend": jax.devices()[0].platform,
+        "host": platform.machine(),
+        "models": {},
+    }
+    for model in models:
+        row = bench_model(model, batch=batch, frames=frames, stages=stages,
+                          seed=seed, slo_ms=slo_ms, traffic_mix=mix,
+                          miss_target=miss_target,
+                          refine_iters=refine_iters, max_factor=max_factor,
+                          flush_guard_ms=flush_guard_ms,
+                          admission_control=admission_control,
+                          place_stages=place_stages, poisson=poisson)
+        data["models"][model] = row
+        emit(f"serve_knee/{model}/knee_qps", 0.0,
+             f"{row['knee_qps']}qps|x{row['knee_of_steady']}_of_steady|"
+             f"miss={row['knee_miss_rate']}|"
+             f"probes={len(row['probes'])}")
+    with open(out, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    print(f"\n[serve_knee_bench] wrote {out} ({len(data['models'])} "
+          f"model(s), batch {batch}, miss target {miss_target:.0%})")
+    return data
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="AlexNet only, small batch (CI bench-smoke)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--frames", type=int, default=None)
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="params/calibration/stream/schedule RNG seed")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="interactive-class deadline (default: derived "
+                         "from the measured service time)")
+    ap.add_argument("--traffic-mix", default=None, dest="traffic_mix",
+                    help="name:priority:share[:deadline_ms],... "
+                         "(default: interactive 25%% + batch 75%%)")
+    ap.add_argument("--miss-target", type=float,
+                    default=DEFAULT_MISS_TARGET,
+                    help="armed-class miss rate defining 'sustained' "
+                         "(default 0.01)")
+    ap.add_argument("--max-factor", type=float, default=8.0,
+                    help="sweep cap as a multiple of measured steady "
+                         "fps (default 8)")
+    ap.add_argument("--refine-iters", type=int, default=None,
+                    help="bisection refinements of the bracket "
+                         "(default 3, 2 with --quick)")
+    ap.add_argument("--flush-guard-ms", type=float, default=None,
+                    help="fixed flush guard (default: adaptive)")
+    ap.add_argument("--no-admission", action="store_true",
+                    help="disable estimated-wait admission control")
+    ap.add_argument("--place-stages", action="store_true",
+                    help="pin stage i to jax.devices()[i %% n]")
+    ap.add_argument("--poisson", action="store_true",
+                    help="exponential inter-arrival gaps (bursty)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--model", action="append", default=None,
+                    choices=sorted(W.CNN_MODELS), dest="models")
+    args = ap.parse_args(argv)
+    from benchmarks.run import print_csv
+    csv: list[str] = []
+
+    def emit(name, us, derived=""):
+        csv.append(f"{name},{us:.1f},{derived}")
+
+    run(emit, quick=args.quick, batch=args.batch, frames=args.frames,
+        out=args.out, models=args.models, stages=args.stages,
+        seed=args.seed, slo_ms=args.slo_ms,
+        traffic_mix_spec=args.traffic_mix,
+        miss_target=args.miss_target, refine_iters=args.refine_iters,
+        max_factor=args.max_factor, flush_guard_ms=args.flush_guard_ms,
+        admission_control=not args.no_admission,
+        place_stages=args.place_stages, poisson=args.poisson)
+    print_csv(csv)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

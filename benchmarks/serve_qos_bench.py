@@ -36,7 +36,9 @@ DEFAULT_LOAD_FACTORS = (0.6, 1.2)
 def bench_model(model: str, *, batch: int, frames: int | None,
                 stages: int, seed: int, slo_ms: float | None,
                 traffic_mix, load_factors: tuple[float, ...],
-                place_stages: bool, poisson: bool) -> dict:
+                place_stages: bool, poisson: bool,
+                admission_control: bool,
+                flush_guard_ms: float | None) -> dict:
     """One model: throughput phase + one open-loop mixed-traffic replay
     per load factor, over one compiled program."""
     prog = compile_for_serving(model, bits=8, seed=seed)
@@ -44,7 +46,9 @@ def bench_model(model: str, *, batch: int, frames: int | None,
     return serve_qos(model, frames=n, batch=batch, stages=stages,
                      seed=seed, slo_ms=slo_ms, traffic_mix=traffic_mix,
                      load_factors=load_factors, place_stages=place_stages,
-                     poisson=poisson, program=prog, verbose=True)
+                     poisson=poisson, admission_control=admission_control,
+                     flush_guard_ms=flush_guard_ms,
+                     program=prog, verbose=True)
 
 
 def run(emit, *, quick: bool = False, batch: int | None = None,
@@ -53,7 +57,9 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         seed: int = 0, slo_ms: float | None = None,
         traffic_mix_spec: str | None = None,
         load_factors: tuple[float, ...] = DEFAULT_LOAD_FACTORS,
-        place_stages: bool = False, poisson: bool = False) -> dict:
+        place_stages: bool = False, poisson: bool = False,
+        admission_control: bool = True,
+        flush_guard_ms: float | None = None) -> dict:
     if models is None:
         models = ["alexnet"] if quick else list(W.CNN_MODELS)
     if batch is None:
@@ -75,6 +81,12 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         "poisson": poisson,        # the artifact replays bit-for-bit
         "load_factors": list(load_factors),
         "place_stages": place_stages,
+        # The control-plane config behind these numbers, recorded so the
+        # knee and qos artifacts are comparable across PRs (per-rate
+        # rows additionally carry the live estimator state as
+        # "control").
+        "admission_control": admission_control,
+        "flush_guard_ms": flush_guard_ms,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "jax_version": jax.__version__,
         "backend": jax.devices()[0].platform,
@@ -85,7 +97,9 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         row = bench_model(model, batch=batch, frames=frames, stages=stages,
                           seed=seed, slo_ms=slo_ms, traffic_mix=mix,
                           load_factors=load_factors,
-                          place_stages=place_stages, poisson=poisson)
+                          place_stages=place_stages, poisson=poisson,
+                          admission_control=admission_control,
+                          flush_guard_ms=flush_guard_ms)
         data["models"][model] = row
         for rate_key, rrow in row["rates"].items():
             for name, crow in rrow["classes"].items():
@@ -126,6 +140,12 @@ def main(argv=None) -> int:
                     help="pin stage i to jax.devices()[i %% n]")
     ap.add_argument("--poisson", action="store_true",
                     help="exponential inter-arrival gaps (bursty)")
+    ap.add_argument("--no-admission", action="store_true",
+                    help="disable estimated-wait admission control "
+                         "(PR-4 lane-bound-only admission)")
+    ap.add_argument("--flush-guard-ms", type=float, default=None,
+                    help="fixed expedited-flush guard (default: "
+                         "adaptive, 25%% of the service estimate + 2ms)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--model", action="append", default=None,
                     choices=sorted(W.CNN_MODELS), dest="models")
@@ -141,7 +161,9 @@ def main(argv=None) -> int:
         seed=args.seed, slo_ms=args.slo_ms,
         traffic_mix_spec=args.traffic_mix,
         load_factors=tuple(args.load_factors or DEFAULT_LOAD_FACTORS),
-        place_stages=args.place_stages, poisson=args.poisson)
+        place_stages=args.place_stages, poisson=args.poisson,
+        admission_control=not args.no_admission,
+        flush_guard_ms=args.flush_guard_ms)
     print_csv(csv)
     return 0
 

@@ -14,15 +14,30 @@ Schemas are selected by the artifact's ``bench`` field:
 * ``serve_qos`` — per arrival rate and per traffic class (at least two):
   queueing/assembly/compute phase-split percentiles, SLO miss rate, and
   drop rate, plus the recorded seed that replays the schedule
-  (``benchmarks/serve_qos_bench.py``).
+  (``benchmarks/serve_qos_bench.py``);
+* ``serve_knee`` — the bracketing absolute-QPS sweep: every probe with
+  its armed-class miss rate, plus the knee (max sustained QPS) as the
+  headline capacity number (``benchmarks/serve_knee_bench.py``).
 
   python benchmarks/validate_bench.py BENCH_serve.json \
-      BENCH_serve_async.json BENCH_serve_qos.json
+      BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json
+
+With ``--baseline DIR`` each artifact is additionally compared against
+the committed reference bands in ``DIR`` (``benchmarks/baselines/``):
+each baseline file names its ``bench`` kind and two band maps over
+"/"-separated paths into the artifact — ``gates`` (regression fails the
+run; machine-speed-*relative* metrics like ``throughput_vs_single_jit``
+or miss rates) and ``warn`` (prints a warning only; machine-speed-
+*absolute* metrics like fps, which legitimately differ across runners).
+A gated path missing from a fresh artifact is a failure too — renaming
+a field cannot silently disarm its gate.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import sys
 
 REQUIRED_MODEL_KEYS = ("measured_steady_fps", "eager_fps",
@@ -45,10 +60,20 @@ REQUIRED_QOS_MODEL_KEYS = ("measured_steady_fps", "modeled_fps_alg1",
 REQUIRED_QOS_RATE_KEYS = ("arrival_fps", "load_factor", "submitted",
                           "completed", "expired", "classes")
 REQUIRED_QOS_CLASS_KEYS = ("submitted", "completed", "expired",
-                           "rejected", "slo_miss_rate", "drop_rate",
-                           "phase_ms")
+                           "rejected", "rejected_wait", "slo_miss_rate",
+                           "drop_rate", "phase_ms")
 QOS_PHASES = ("queueing", "assembly", "compute")
 QOS_PCTS = ("p50", "p95", "p99")
+
+REQUIRED_KNEE_MODEL_KEYS = ("measured_steady_fps", "modeled_fps_alg1",
+                            "batch", "stages", "seed", "slo_ms",
+                            "miss_target", "traffic_mix", "probes",
+                            "knee_qps", "knee_of_steady",
+                            "admission_control", "route")
+REQUIRED_KNEE_PROBE_KEYS = ("arrival_fps", "sustained",
+                            "armed_miss_rate", "armed_submitted",
+                            "submitted", "completed", "expired",
+                            "rejected", "rejected_wait")
 
 
 def _positive(row: dict, key: str) -> bool:
@@ -175,6 +200,62 @@ def _validate_qos_model(name: str, row: dict, errors: list[str]) -> None:
             _validate_qos_class(f"{where}.classes.{cname}", crow, errors)
 
 
+def _validate_knee_model(name: str, row: dict, errors: list[str]) -> None:
+    for key in REQUIRED_KNEE_MODEL_KEYS:
+        if key not in row:
+            errors.append(f"models.{name}: missing {key}")
+    if not _positive(row, "measured_steady_fps"):
+        errors.append(f"models.{name}.measured_steady_fps="
+                      f"{row.get('measured_steady_fps')!r} not > 0")
+    target = row.get("miss_target")
+    if not (isinstance(target, (int, float)) and 0 < target < 1):
+        errors.append(f"models.{name}.miss_target={target!r} "
+                      f"not in (0, 1)")
+        target = None
+    probes = row.get("probes")
+    if not isinstance(probes, list) or len(probes) < 2:
+        errors.append(f"models.{name}: needs >= 2 probes, got "
+                      f"{len(probes) if isinstance(probes, list) else probes!r}")
+        return
+    sustained_rates = []
+    for i, prow in enumerate(probes):
+        where = f"models.{name}.probes[{i}]"
+        if not isinstance(prow, dict):
+            errors.append(f"{where}: row is {type(prow).__name__}, "
+                          f"not object")
+            continue
+        for key in REQUIRED_KNEE_PROBE_KEYS:
+            if key not in prow:
+                errors.append(f"{where}: missing {key}")
+        if not _positive(prow, "arrival_fps"):
+            errors.append(f"{where}.arrival_fps="
+                          f"{prow.get('arrival_fps')!r} not > 0")
+        miss = prow.get("armed_miss_rate")
+        if not (isinstance(miss, (int, float)) and 0 <= miss <= 1):
+            errors.append(f"{where}.armed_miss_rate={miss!r} "
+                          f"not in [0, 1]")
+            continue
+        if target is not None and \
+                bool(prow.get("sustained")) != (miss < target):
+            errors.append(f"{where}: sustained={prow.get('sustained')!r} "
+                          f"contradicts miss {miss} vs target {target}")
+        if prow.get("sustained"):
+            sustained_rates.append(prow["arrival_fps"])
+    knee = row.get("knee_qps")
+    if knee is None:
+        if sustained_rates:
+            errors.append(f"models.{name}: knee_qps is null but "
+                          f"{len(sustained_rates)} probes sustained")
+        return
+    if not isinstance(knee, (int, float)) or knee <= 0:
+        errors.append(f"models.{name}.knee_qps={knee!r} not > 0")
+        return
+    # The headline must be a probe the sweep actually sustained.
+    if sustained_rates and abs(knee - max(sustained_rates)) > 1e-6:
+        errors.append(f"models.{name}: knee_qps={knee} is not the max "
+                      f"sustained probe ({max(sustained_rates)})")
+
+
 def validate(path: str) -> list[str]:
     errors: list[str] = []
     try:
@@ -189,11 +270,12 @@ def validate(path: str) -> list[str]:
     if data.get("schema_version") != 1:
         errors.append(f"schema_version={data.get('schema_version')!r} != 1")
     bench = data.get("bench", "serve")
-    if bench not in ("serve", "serve_async", "serve_qos"):
+    if bench not in ("serve", "serve_async", "serve_qos", "serve_knee"):
         errors.append(f"unknown bench kind {bench!r}")
         return errors
-    if bench == "serve_qos" and not isinstance(data.get("seed"), int):
-        errors.append("serve_qos artifact must record its schedule seed")
+    if bench in ("serve_qos", "serve_knee") and \
+            not isinstance(data.get("seed"), int):
+        errors.append(f"{bench} artifact must record its schedule seed")
     models = data.get("models")
     if not isinstance(models, dict) or not models:
         errors.append("empty or missing 'models'")
@@ -207,15 +289,154 @@ def validate(path: str) -> list[str]:
             _validate_serve_model(name, row, errors)
         elif bench == "serve_qos":
             _validate_qos_model(name, row, errors)
+        elif bench == "serve_knee":
+            _validate_knee_model(name, row, errors)
         else:
             _validate_async_model(name, row, errors)
     return errors
 
 
+# ---------------------------------------------------------------------------
+# Baseline regression gate (--baseline)
+# ---------------------------------------------------------------------------
+
+
+def _lookup(data, path: str):
+    """Walk a "/"-separated path through nested dicts/lists ("/" rather
+    than "." because rate keys like "0.6x" contain dots). Returns
+    (found, value)."""
+    cur = data
+    for part in path.split("/"):
+        if isinstance(cur, dict):
+            if part not in cur:
+                return False, None
+            cur = cur[part]
+        elif isinstance(cur, list):
+            try:
+                cur = cur[int(part)]
+            except (ValueError, IndexError):
+                return False, None
+        else:
+            return False, None
+    return True, cur
+
+
+def load_baselines(dirname: str) -> tuple[list[dict], list[str]]:
+    """Load every ``*.json`` baseline in ``dirname``. A malformed
+    baseline is an error — a gate that cannot load must not silently
+    pass."""
+    baselines, errors = [], []
+    if not os.path.isdir(dirname):
+        return [], [f"baseline dir {dirname!r} not found"]
+    for fname in sorted(os.listdir(dirname)):
+        if not fname.endswith(".json"):
+            continue
+        fpath = os.path.join(dirname, fname)
+        try:
+            with open(fpath) as f:
+                b = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"baseline {fpath}: unreadable: {e}")
+            continue
+        if not isinstance(b, dict) or "bench" not in b:
+            errors.append(f"baseline {fpath}: missing 'bench' field")
+            continue
+        b["_file"] = fpath
+        baselines.append(b)
+    return baselines, errors
+
+
+def _check_band(where: str, value, band: dict) -> str | None:
+    if not isinstance(value, (int, float)) or isinstance(value, bool) \
+            or value != value:            # NaN
+        return f"{where}={value!r} is not a comparable number"
+    lo, hi = band.get("min"), band.get("max")
+    if lo is not None and value < lo:
+        return f"{where}={value} below baseline min {lo}"
+    if hi is not None and value > hi:
+        return f"{where}={value} above baseline max {hi}"
+    return None
+
+
+def check_baseline(data: dict, baseline: dict) -> tuple[list[str],
+                                                        list[str]]:
+    """Compare one artifact against one baseline's bands. Returns
+    (gate_errors, warnings). Gated paths must exist; warn-only paths
+    that are missing only warn."""
+    gate_errors, warnings = [], []
+    src = baseline.get("_file", "<baseline>")
+    for path, band in sorted(baseline.get("gates", {}).items()):
+        found, value = _lookup(data, path)
+        if not found:
+            gate_errors.append(f"{src}: gated path {path!r} missing "
+                               f"from artifact")
+            continue
+        msg = _check_band(path, value, band)
+        if msg is not None:
+            gate_errors.append(f"{src}: {msg}")
+    for path, band in sorted(baseline.get("warn", {}).items()):
+        found, value = _lookup(data, path)
+        if not found:
+            warnings.append(f"{src}: warn path {path!r} missing "
+                            f"from artifact")
+            continue
+        msg = _check_band(path, value, band)
+        if msg is not None:
+            warnings.append(f"{src}: {msg}")
+    return gate_errors, warnings
+
+
+def check_against_baselines(path: str, data: dict,
+                            baselines: list[dict]) -> tuple[list[str],
+                                                            list[str]]:
+    """Run every baseline matching this artifact's bench kind (and
+    quick-mode flag, when the baseline pins one — quick reference
+    numbers say nothing about a full run). Matching zero baselines is
+    never silent: if this bench kind has committed baselines but none
+    fit the artifact's quick flag, that is a gate failure (a regression
+    in the quick wiring would otherwise disarm every band); a bench
+    kind with no baselines at all only warns."""
+    gate_errors, warnings = [], []
+    kind = [b for b in baselines if b.get("bench") == data.get("bench")]
+    matched = [b for b in kind
+               if "quick" not in b
+               or bool(b["quick"]) == bool(data.get("quick"))]
+    if not kind:
+        warnings.append(f"{path}: no committed baseline for bench kind "
+                        f"{data.get('bench')!r}")
+    elif not matched:
+        gate_errors.append(
+            f"{path}: bench kind {data.get('bench')!r} has "
+            f"{len(kind)} baseline(s) but none match "
+            f"quick={bool(data.get('quick'))!r} — the gate would be "
+            f"silently disarmed")
+    for b in matched:
+        ge, wa = check_baseline(data, b)
+        gate_errors.extend(ge)
+        warnings.extend(wa)
+    if matched:
+        print(f"[validate_bench] {path}: checked against {len(matched)} "
+              f"baseline(s)")
+    return gate_errors, warnings
+
+
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    paths = argv if argv else ["BENCH_serve.json"]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["BENCH_serve.json"],
+                    help="BENCH_*.json artifacts to validate")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="also gate artifacts against the committed "
+                         "reference bands in DIR "
+                         "(benchmarks/baselines/)")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["BENCH_serve.json"]
+    baselines: list[dict] = []
     bad = False
+    if args.baseline is not None:
+        baselines, berrs = load_baselines(args.baseline)
+        for e in berrs:
+            bad = True
+            print(f"[validate_bench] FAIL: {e}", file=sys.stderr)
     for path in paths:
         errors = validate(path)
         if errors:
@@ -224,8 +445,19 @@ def main(argv=None) -> int:
                 print(f"[validate_bench] FAIL: {e}", file=sys.stderr)
             continue
         with open(path) as f:
-            n = len(json.load(f)["models"])
-        print(f"[validate_bench] OK: {path} ({n} model(s))")
+            data = json.load(f)
+        if baselines:
+            gate_errors, warnings = check_against_baselines(
+                path, data, baselines)
+            for w in warnings:
+                print(f"[validate_bench] WARN: {w}")
+            if gate_errors:
+                bad = True
+                for e in gate_errors:
+                    print(f"[validate_bench] FAIL: {e}", file=sys.stderr)
+                continue
+        print(f"[validate_bench] OK: {path} ({len(data['models'])} "
+              f"model(s))")
     return 1 if bad else 0
 
 

@@ -16,17 +16,28 @@ request latency. ``--place-stages`` pins stage i to its own device
 With ``--qos`` the stream is a two-class mix (25% interactive with a
 deadline, 75% best-effort batch) through the QoS frontend's priority
 lanes, replayed below and above saturation — per-class latency split
-into queueing / assembly / compute, with SLO miss and drop rates.
+into queueing / assembly / compute, with SLO miss and drop rates. The
+control decisions are adaptive: an EWMA service-time estimate drives
+the expedited flush, and estimated-wait admission refuses hopeless
+requests at submit (``rejected_wait``) instead of letting them expire
+in queue.
+
+With ``--knee`` the example runs the bracketing absolute-QPS sweep
+instead and reports the capacity knee: the maximum sustained rate at
+which the interactive class misses its SLO less than 1% of the time —
+same sweep as ``repro.launch.serve_cnn --knee`` and
+``benchmarks/serve_knee_bench.py``.
 
   PYTHONPATH=src python examples/cnn_serving.py [--model alexnet]
   PYTHONPATH=src python examples/cnn_serving.py --stages 2
   PYTHONPATH=src python examples/cnn_serving.py --stages 2 --qos
+  PYTHONPATH=src python examples/cnn_serving.py --stages 2 --knee
 """
 
 import argparse
 
 from repro.core import workload as W
-from repro.launch.serve_cnn import serve, serve_async, serve_qos
+from repro.launch.serve_cnn import serve, serve_async, serve_knee, serve_qos
 
 
 def main():
@@ -43,13 +54,34 @@ def main():
     ap.add_argument("--qos", action="store_true",
                     help="mixed-traffic QoS demo (priority lanes, "
                          "deadlines, phase-split latency)")
+    ap.add_argument("--knee", action="store_true",
+                    help="bracketing absolute-QPS sweep: report the "
+                         "capacity knee (max sustained rate with "
+                         "interactive SLO miss < 1%%)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="interactive-class deadline (default: derived "
                          "from the measured service time)")
     args = ap.parse_args()
     if args.slo_ms is not None:      # an SLO only means anything in QoS
         args.qos = True              # mode — match the launcher CLI
-    if args.qos:
+    if args.knee:
+        r = serve_knee(args.model, frames=max(args.frames, 4 * args.batch),
+                       batch=args.batch, stages=max(args.stages, 1),
+                       slo_ms=args.slo_ms, place_stages=args.place_stages)
+        knee = r["knee_qps"]
+        print(f"\n{r['stages']}-stage capacity knee of {r['model']} "
+              f"(slo {r['slo_ms']:.0f} ms, steady "
+              f"{r['measured_steady_fps']:.1f} fps):")
+        for p in r["probes"]:
+            print(f"  {p['arrival_fps']:8.1f} qps: "
+                  f"{'sustained' if p['sustained'] else 'MISS     '} "
+                  f"miss {p['armed_miss_rate']:6.1%} | expired "
+                  f"{p['expired']:3d} | rejected_wait "
+                  f"{p['rejected_wait']:3d}")
+        print("  knee: "
+              + (f"{knee:.1f} qps ({r['knee_of_steady']:.2f}x steady)"
+                 if knee is not None else "not found at any probed rate"))
+    elif args.qos:
         r = serve_qos(args.model, frames=max(args.frames, 4 * args.batch),
                       batch=args.batch, stages=max(args.stages, 1),
                       slo_ms=args.slo_ms, place_stages=args.place_stages)

@@ -12,8 +12,14 @@ latency percentiles for the async path.
 With ``--qos`` (or ``--traffic-mix`` / ``--slo-ms``) the stream is a
 mixed-traffic arrival process through the QoS frontend: priority lanes,
 per-request deadlines with drop-on-SLO-miss, and per-class latency split
-into queueing / assembly / compute. ``--place-stages`` pins stage i to
-``jax.devices()[i % n]`` (transparent on a single device).
+into queueing / assembly / compute — with the expedited flush and the
+(default-on) estimated-wait admission control driven by an online EWMA
+service-time estimate warm-started from the calibration pass.
+``--knee`` instead runs the bracketing absolute-QPS sweep and reports
+the capacity knee: the max sustained rate at which the interactive
+class misses its SLO less than ``--miss-target`` of the time.
+``--place-stages`` pins stage i to ``jax.devices()[i % n]``
+(transparent on a single device).
 
 Examples (CPU):
   PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
@@ -160,6 +166,32 @@ def _default_max_wait_ms(batch: int, rate: float) -> float:
     return 1e3 * batch / rate if rate > 0 else 50.0
 
 
+def _warmed_frontend(px, steady: float, rate: float, batch: int, *,
+                     max_wait_ms: float | None,
+                     admission_control: bool,
+                     flush_guard_ms: float | None):
+    """One convention for the per-replay control plane — shared by the
+    QoS rates and the knee probes so their artifacts stay comparable: a
+    fresh estimator per replay (an overload replay's noisy tail must
+    not skew the next replay's admission), warm-started from the
+    measured calibration pass — the latency channel at
+    ``stages x window`` (a K-stage traversal is ~K windows), the window
+    channel at the window itself (``batch / steady``) — behind a
+    frontend whose ``max_wait`` defaults to one full-batch window at
+    the arrival rate."""
+    from repro.serving import (AsyncFrontend, ServiceTimeEstimator,
+                               window_key)
+    warm = batch / max(steady, 1e-9)
+    est = ServiceTimeEstimator()
+    est.warm_start(batch, px.partition.n_stages * warm)
+    est.warm_start(window_key(batch), warm)
+    wait_ms = (max_wait_ms if max_wait_ms is not None
+               else _default_max_wait_ms(batch, min(rate, steady)))
+    return AsyncFrontend(px, max_wait_ms=wait_ms, estimator=est,
+                         admission_control=admission_control,
+                         flush_guard_ms=flush_guard_ms)
+
+
 def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
                 stages: int = 2, bits: int = 8, route: str | None = None,
                 seed: int = 0, theta: int | None = None,
@@ -265,6 +297,7 @@ def _class_row(cs) -> dict:
         "completed": cs.completed,
         "expired": cs.expired,
         "rejected": cs.rejected,
+        "rejected_wait": cs.rejected_wait,
         "failed": cs.failed,
         "late": cs.late,
         "drop_rate": round(cs.drop_rate, 4),
@@ -285,6 +318,8 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
               max_wait_ms: float | None = None,
               place_stages: bool = False,
               poisson: bool = False,
+              admission_control: bool = True,
+              flush_guard_ms: float | None = None,
               output: str = "top1", program=None,
               verbose: bool = True) -> dict:
     """Serve a mixed-traffic stream through the QoS frontend and report
@@ -310,9 +345,19 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
     backend but binds under overload (a fixed wall-clock default would
     be always-missed for a slow model on CPU and never-missed for a
     fast one, telling us nothing).
+
+    The frontend's control decisions are adaptive: each rate's replay
+    gets a :class:`~repro.serving.ServiceTimeEstimator` warm-started
+    from the measured calibration pass (one batch window at the steady
+    rate) and kept current by every completed batch, driving the
+    expedited flush; ``admission_control`` (default on) additionally
+    refuses deadline-armed requests whose estimated wait already
+    exceeds their budget (``rejected_wait`` — they fail fast instead of
+    expiring in queue). Set ``admission_control=False`` for the
+    estimator-less PR-4 admission behaviour.
     """
-    from repro.serving import (AsyncFrontend, PipelineExecutor,
-                               default_mix, make_schedule, replay)
+    from repro.serving import (PipelineExecutor, default_mix,
+                               make_schedule, replay)
 
     if frames <= batch:
         raise ValueError(f"frames={frames} <= batch={batch}: no "
@@ -339,11 +384,13 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
         mix = tuple(traffic_mix) if traffic_mix is not None \
             else default_mix(slo_ms)
 
+        warm_start_s = batch / max(steady, 1e-9)
         for factor in load_factors:
             rate = factor * base
-            wait_ms = (max_wait_ms if max_wait_ms is not None
-                       else _default_max_wait_ms(batch, min(rate, steady)))
-            fe = AsyncFrontend(px, max_wait_ms=wait_ms)
+            fe = _warmed_frontend(px, steady, rate, batch,
+                                  max_wait_ms=max_wait_ms,
+                                  admission_control=admission_control,
+                                  flush_guard_ms=flush_guard_ms)
             schedule = make_schedule(len(stream), rate, mix, seed=seed,
                                      poisson=poisson)
             replay(fe, stream, schedule)
@@ -353,16 +400,18 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
                 "load_factor": factor,
                 "arrival_fps": round(rate, 3),
                 "client_fps": round(st.fps, 3),
-                "max_wait_ms": round(wait_ms, 3),
+                "max_wait_ms": round(fe.max_wait_s * 1e3, 3),
                 "submitted": st.submitted,
                 "completed": st.completed,
                 "expired": st.expired,
                 "rejected": st.rejected,
+                "rejected_wait": st.rejected_wait,
                 "failed": st.failed,
                 "batches": st.batches,
                 "flushes_full": st.flushes_full,
                 "flushes_timeout": st.flushes_timeout,
                 "flushes_deadline": st.flushes_deadline,
+                "control": fe.control_config(),
                 "classes": {name: _class_row(cs)
                             for name, cs in sorted(st.classes.items())},
             }
@@ -395,6 +444,9 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
         "seed": seed,
         "slo_ms": slo_ms,
         "poisson": poisson,
+        "admission_control": admission_control,
+        "flush_guard_ms": flush_guard_ms,
+        "estimator_warm_start_ms": round(1e3 * warm_start_s, 3),
         "traffic_mix": [c.to_json() for c in mix],
         "frames": frames,
         "compile_plus_warmup_s": round(warmup_s, 3),
@@ -402,6 +454,208 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
         "modeled_fps_alg1": round(prog.fps(), 3),
         "rates": rates,
     }
+
+
+def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
+               stages: int = 2, bits: int = 8, route: str | None = None,
+               seed: int = 0, theta: int | None = None,
+               slo_ms: float | None = None,
+               traffic_mix=None,
+               miss_target: float = 0.01,
+               start_factor: float = 0.5,
+               max_factor: float = 4.0,
+               refine_iters: int = 3,
+               max_wait_ms: float | None = None,
+               flush_guard_ms: float | None = None,
+               admission_control: bool = True,
+               place_stages: bool = False,
+               poisson: bool = False,
+               output: str = "top1", program=None,
+               verbose: bool = True) -> dict:
+    """Bracketing absolute-QPS sweep: find the knee — the maximum
+    sustained arrival rate at which the deadline-armed (interactive)
+    classes keep ``slo_miss_rate < miss_target`` — and record it as the
+    headline capacity number.
+
+    ``serve_qos`` reports behaviour at load factors *relative to* the
+    measured steady fps; the knee is the *absolute* QPS answer to "how
+    much traffic can this deployment take": replay the seeded mix
+    open-loop at ``start_factor * steady`` QPS, double while the armed
+    classes stay under ``miss_target`` (capped at ``max_factor *
+    steady``), halve downward if even the first probe misses, then
+    bisect the sustained/unsustained bracket ``refine_iters`` times.
+    Every probe reuses the same compiled pipeline, the same seeded
+    schedule generator, and a fresh estimator warm-started from the
+    calibration pass, so the sweep is reproducible from the recorded
+    ``(seed, mix, rates)`` alone. A miss at any probe counts every
+    armed-class request that did not complete inside its deadline —
+    expired + refused at admission (``rejected_wait``, or ``rejected``
+    on a full lane) + served late — so failing fast cannot launder the
+    miss rate.
+    """
+    from repro.serving import (PipelineExecutor, armed_class_names,
+                               default_mix, make_schedule, replay)
+
+    if frames <= batch:
+        raise ValueError(f"frames={frames} <= batch={batch}: no "
+                         f"steady-state window (use frames >= 2*batch)")
+    if not 0.0 < miss_target < 1.0:
+        raise ValueError(f"miss_target={miss_target} not in (0, 1)")
+    prog = program if program is not None else compile_for_serving(
+        model_name, bits=bits, seed=seed, theta=theta)
+    stream = synthetic_stream(model_name, frames, seed)
+
+    px = PipelineExecutor(prog, stages=stages, batch_size=batch,
+                          route=route, output=output,
+                          place_stages=place_stages)
+    part = px.partition
+    probes: list[dict] = []
+    with px:
+        warmup_s, ph1 = _pipeline_throughput(px, stream, batch)
+        steady = ph1.steady_fps
+        if slo_ms is None:
+            slo_ms = round((part.n_stages + 3) * 1e3 * batch
+                           / max(steady, 1e-9), 1)
+        mix = tuple(traffic_mix) if traffic_mix is not None \
+            else default_mix(slo_ms)
+        armed = armed_class_names(mix)
+        if not armed:
+            raise ValueError("traffic mix has no deadline-armed class — "
+                             "nothing can define 'sustained'")
+        warm_start_s = batch / max(steady, 1e-9)
+
+        def _probe(rate: float) -> dict:
+            fe = _warmed_frontend(px, steady, rate, batch,
+                                  max_wait_ms=max_wait_ms,
+                                  admission_control=admission_control,
+                                  flush_guard_ms=flush_guard_ms)
+            schedule = make_schedule(len(stream), rate, mix, seed=seed,
+                                     poisson=poisson)
+            replay(fe, stream, schedule)
+            fe.close()
+            st = fe.stats
+            cls = [st.klass(n) for n in armed if n in st.classes]
+            n_armed = sum(c.submitted for c in cls)
+            n_miss = sum(c.expired + c.rejected + c.rejected_wait + c.late
+                         for c in cls)
+            # The verdict is computed on the rounded rate the artifact
+            # stores, so `sustained` and `armed_miss_rate` can never
+            # contradict each other under the validator's cross-check.
+            miss = round(n_miss / n_armed if n_armed else 0.0, 4)
+            total_s = [s for c in cls for s in c.total_s]
+            # None, not NaN, when no armed request completed — NaN is
+            # not valid JSON and would poison the uploaded artifact.
+            p95_ms = (round(float(np.percentile(np.asarray(total_s), 95))
+                            * 1e3, 3) if total_s else None)
+            row = {
+                "arrival_fps": round(rate, 3),
+                "sustained": bool(miss < miss_target),
+                "armed_miss_rate": miss,
+                "armed_submitted": n_armed,
+                "armed_missed": n_miss,
+                "armed_p95_ms": p95_ms,
+                "client_fps": round(st.fps, 3),
+                "max_wait_ms": round(fe.max_wait_s * 1e3, 3),
+                "submitted": st.submitted,
+                "completed": st.completed,
+                "expired": st.expired,
+                "rejected": st.rejected,
+                "rejected_wait": st.rejected_wait,
+                "failed": st.failed,
+            }
+            if verbose:
+                print(f"[serve_knee] {model_name} probe {rate:8.2f} qps: "
+                      f"armed miss {miss:6.2%} "
+                      f"({'sustained' if row['sustained'] else 'MISS'}) | "
+                      f"expired {st.expired} rejected_wait "
+                      f"{st.rejected_wait} p95 "
+                      + (f"{p95_ms:.1f}ms" if p95_ms is not None else "n/a"))
+            return row
+
+        # Bracket: escalate from start_factor * steady by doubling until
+        # the armed miss rate crosses the target (or the cap), then
+        # bisect [highest sustained, lowest unsustained].
+        cap = max_factor * steady
+        lo_rate, lo_row, hi_rate = None, None, None
+        rate = start_factor * steady
+        while hi_rate is None:
+            row = _probe(rate)
+            probes.append(row)
+            if row["sustained"]:
+                lo_rate, lo_row = rate, row
+                if rate >= cap:
+                    break
+                rate = min(2 * rate, cap)
+            else:
+                hi_rate = rate
+        if lo_rate is None:
+            # Even the opening probe missed: descend until sustained or
+            # the sweep floor — a knee of None means this deployment
+            # cannot hold the SLO at any probed rate.
+            floor = 0.05 * steady
+            while lo_rate is None and rate / 2 >= floor:
+                rate = rate / 2
+                row = _probe(rate)
+                probes.append(row)
+                if row["sustained"]:
+                    lo_rate, lo_row = rate, row
+                else:
+                    hi_rate = rate
+        for _ in range(max(0, int(refine_iters))):
+            if lo_rate is None or hi_rate is None:
+                break
+            if hi_rate / lo_rate < 1.05:
+                break
+            mid = (lo_rate + hi_rate) / 2
+            row = _probe(mid)
+            probes.append(row)
+            if row["sustained"]:
+                lo_rate, lo_row = mid, row
+            else:
+                hi_rate = mid
+
+    result = {
+        "model": model_name,
+        "bits": bits,
+        "route": px.route,
+        "batch": batch,
+        "stages": part.n_stages,
+        "boundaries": list(part.boundaries),
+        "stage_balance": round(part.balance, 4),
+        "placed": place_stages,
+        "seed": seed,
+        "slo_ms": slo_ms,
+        "poisson": poisson,
+        "miss_target": miss_target,
+        "admission_control": admission_control,
+        "flush_guard_ms": flush_guard_ms,
+        "estimator_warm_start_ms": round(1e3 * warm_start_s, 3),
+        "traffic_mix": [c.to_json() for c in mix],
+        "frames": frames,
+        "compile_plus_warmup_s": round(warmup_s, 3),
+        "measured_steady_fps": round(steady, 3),
+        "modeled_fps_alg1": round(prog.fps(), 3),
+        "knee_qps": None if lo_rate is None else round(lo_rate, 3),
+        "knee_of_steady": (None if lo_rate is None
+                           else round(lo_rate / max(steady, 1e-9), 4)),
+        "knee_miss_rate": (None if lo_row is None
+                           else lo_row["armed_miss_rate"]),
+        "knee_armed_p95_ms": (None if lo_row is None
+                              else lo_row["armed_p95_ms"]),
+        "bracket_unsustained_qps": (None if hi_rate is None
+                                    else round(hi_rate, 3)),
+        "probes": probes,
+    }
+    if verbose:
+        knee = result["knee_qps"]
+        print(f"[serve_knee] {model_name} K={part.n_stages} batch={batch}: "
+              f"knee "
+              + (f"{knee:.1f} qps ({result['knee_of_steady']:.2f}x steady)"
+                 if knee is not None else "not found")
+              + f" at armed miss < {miss_target:.0%} | steady "
+              f"{steady:.1f} fps | slo {slo_ms:.0f}ms | "
+              f"{len(probes)} probes")
+    return result
 
 
 def main(argv=None) -> int:
@@ -435,6 +689,19 @@ def main(argv=None) -> int:
                     help="serve a mixed-traffic stream through the QoS "
                          "frontend (priority lanes + deadlines) and "
                          "report per-class phase-split latency")
+    ap.add_argument("--knee", action="store_true",
+                    help="bracketing absolute-QPS sweep: report the max "
+                         "sustained rate with interactive miss rate "
+                         "under --miss-target (the capacity knee)")
+    ap.add_argument("--miss-target", type=float, default=0.01,
+                    help="armed-class SLO miss rate defining 'sustained' "
+                         "for --knee (default 0.01)")
+    ap.add_argument("--no-admission", action="store_true",
+                    help="disable estimated-wait admission control "
+                         "(PR-4 lane-bound-only admission)")
+    ap.add_argument("--flush-guard-ms", type=float, default=None,
+                    help="fixed expedited-flush guard margin (default: "
+                         "adaptive, 25%% of the service estimate + 2ms)")
     ap.add_argument("--traffic-mix", default=None,
                     help="QoS mix as name:priority:share[:deadline_ms] "
                          "comma-separated ('slo' = --slo-ms; default: "
@@ -450,18 +717,30 @@ def main(argv=None) -> int:
     if args.quick:
         args.frames, args.batch = 8, 4
     qos = args.qos or args.traffic_mix is not None or args.slo_ms is not None
-    if qos:
+    if args.knee or qos:
         from repro.serving import parse_traffic_mix
         # slo_ms=None lets serve_qos derive a feasible deadline from
         # the measured service time; only an explicit --slo-ms pins it
         # (and is required when --traffic-mix uses the 'slo' token).
         mix = (parse_traffic_mix(args.traffic_mix, args.slo_ms)
                if args.traffic_mix else None)
+    if args.knee:
+        serve_knee(args.model, frames=args.frames, batch=args.batch,
+                   stages=max(args.stages, 1), bits=args.bits,
+                   route=args.route, seed=args.seed, slo_ms=args.slo_ms,
+                   traffic_mix=mix, miss_target=args.miss_target,
+                   max_wait_ms=args.max_wait_ms,
+                   flush_guard_ms=args.flush_guard_ms,
+                   admission_control=not args.no_admission,
+                   place_stages=args.place_stages, output=args.output)
+    elif qos:
         serve_qos(args.model, frames=args.frames, batch=args.batch,
                   stages=max(args.stages, 1), bits=args.bits,
                   route=args.route, seed=args.seed, slo_ms=args.slo_ms,
                   traffic_mix=mix, arrival_fps=args.arrival_fps,
                   max_wait_ms=args.max_wait_ms,
+                  admission_control=not args.no_admission,
+                  flush_guard_ms=args.flush_guard_ms,
                   place_stages=args.place_stages, output=args.output)
     elif args.stages > 0:
         serve_async(args.model, frames=args.frames, batch=args.batch,

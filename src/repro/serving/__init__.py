@@ -10,17 +10,22 @@ activation double-buffer analogue (:mod:`~repro.serving
 device — and a QoS-aware request frontend batches live traffic into the
 pipeline through priority lanes with per-request deadlines,
 backpressure, and per-class phase-split latency accounting
-(:mod:`~repro.serving.frontend`). :mod:`~repro.serving.traffic` is the
+(:mod:`~repro.serving.frontend`). The frontend's control decisions —
+expedited flush and estimated-wait admission — are driven by an online
+per-batch-shape EWMA service-time estimator
+(:mod:`~repro.serving.estimator`). :mod:`~repro.serving.traffic` is the
 one seeded synthetic-traffic generator every serving bench replays.
 """
 
+from repro.serving.estimator import ServiceTimeEstimator, window_key
 from repro.serving.frontend import (AsyncFrontend, ClassStats,
                                     DeadlineExpired, FrontendStats,
                                     RequestRejected, ServedRequest)
 from repro.serving.partition import (StagePartition, partition_program,
                                      stage_devices, step_cycles)
 from repro.serving.pipeline_executor import PipelineExecutor
-from repro.serving.traffic import (Arrival, TrafficClass, default_mix,
+from repro.serving.traffic import (Arrival, TrafficClass,
+                                   armed_class_names, default_mix,
                                    make_schedule, parse_traffic_mix,
                                    replay)
 
@@ -33,8 +38,10 @@ __all__ = [
     "PipelineExecutor",
     "RequestRejected",
     "ServedRequest",
+    "ServiceTimeEstimator",
     "StagePartition",
     "TrafficClass",
+    "armed_class_names",
     "default_mix",
     "make_schedule",
     "parse_traffic_mix",
@@ -42,4 +49,5 @@ __all__ = [
     "replay",
     "stage_devices",
     "step_cycles",
+    "window_key",
 ]

@@ -18,12 +18,27 @@ the engine pipeline):
   **highest-priority lane first**: a batch is flushed when it reaches
   ``batch_size`` frames, when the oldest member has waited
   ``max_wait_ms``, **or** when holding it any longer would push a
-  member past its deadline (the expedited flush).
+  member past its deadline (the expedited flush). The expedited flush
+  fires ``est_service + guard`` before the tightest member deadline,
+  where ``est_service`` is an online per-batch-shape EWMA of measured
+  compute phases (:class:`~repro.serving.estimator
+  .ServiceTimeEstimator`, fed from each batch's
+  ``t_dispatched -> t_done``); with no estimate yet it falls back to
+  the static 20%-of-budget guard (``DEADLINE_GUARD_FRAC``), so the
+  frontend is transparent to PR-4 behaviour until it has measurements.
 * a request whose deadline passes while it is still queued or assembling
   is *dropped*, resolving with an ``expired`` outcome (``result()``
   raises :class:`DeadlineExpired`) instead of wasting a batch slot —
   the software form of a frame-rate bound: a frame that missed its
   display slot is not worth computing.
+* with ``admission_control=True``, a deadline-armed request whose
+  deadline budget is already smaller than the estimated wait for the
+  queued work ahead of it (frames in lanes at its priority or higher
+  plus in-flight micro-batches, priced by the estimator) is refused at
+  submit with the ``rejected_wait`` outcome — hopeless requests fail
+  fast instead of expiring in queue (the analogue of dropping a frame
+  at the input buffer when the display slot it targets is already
+  unreachable).
 * every request records four timestamps — ``t_submit`` (enters its
   lane), ``t_batched`` (popped into an assembling batch),
   ``t_dispatched`` (micro-batch handed to the executor), ``t_done``
@@ -42,11 +57,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import queue
 import threading
 import time
 
 import numpy as np
+
+from repro.serving.estimator import ServiceTimeEstimator, window_key
 
 DEFAULT_CLASS = "default"
 
@@ -56,21 +74,15 @@ COMPLETED = "completed"
 FAILED = "failed"
 EXPIRED = "expired"      # deadline passed while queued/assembling; dropped
 REJECTED = "rejected"    # refused at admission (full lane, block=False)
+REJECTED_WAIT = "rejected_wait"  # refused: estimated wait exceeds deadline
 
 
-# The expedited flush fires when this fraction of a request's deadline
-# budget is still left — flushing *at* the deadline would dispatch a
-# batch whose deadline-armed members are already dead on arrival.
+# Fallback expedited-flush rule, used only until the service-time
+# estimator has a measurement: fire when this fraction of a request's
+# deadline budget is still left — flushing *at* the deadline would
+# dispatch a batch whose deadline-armed members are already dead on
+# arrival.
 DEADLINE_GUARD_FRAC = 0.2
-
-
-def _urgent_at(req: "ServedRequest") -> float:
-    """The instant the batcher must flush a batch holding ``req``:
-    80% of the deadline budget spent (inf for best-effort requests)."""
-    if req.deadline_s is None:
-        return float("inf")
-    return req.deadline_s - DEADLINE_GUARD_FRAC * (req.deadline_s
-                                                   - req.t_submit)
 
 
 class DeadlineExpired(RuntimeError):
@@ -78,7 +90,8 @@ class DeadlineExpired(RuntimeError):
 
 
 class RequestRejected(RuntimeError):
-    """The request was refused at admission (lane full, non-blocking)."""
+    """The request was refused at admission — lane full (non-blocking
+    submit) or estimated wait already past its deadline budget."""
 
 
 class ServedRequest:
@@ -133,8 +146,8 @@ class ServedRequest:
         self.t_done = time.perf_counter()
         self._event.set()
 
-    def _reject(self) -> None:
-        self._outcome = REJECTED
+    def _reject(self, outcome: str = REJECTED) -> None:
+        self._outcome = outcome
         self.t_done = time.perf_counter()
         self._event.set()
 
@@ -142,7 +155,8 @@ class ServedRequest:
 
     @property
     def outcome(self) -> str:
-        """'pending' | 'completed' | 'failed' | 'expired' | 'rejected'."""
+        """'pending' | 'completed' | 'failed' | 'expired' | 'rejected'
+        | 'rejected_wait'."""
         return self._outcome
 
     def done(self) -> bool:
@@ -158,6 +172,10 @@ class ServedRequest:
             raise DeadlineExpired(
                 f"request dropped: deadline passed after "
                 f"{(self.t_done - self.t_submit) * 1e3:.1f}ms in queue")
+        if self._outcome == REJECTED_WAIT:
+            raise RequestRejected(
+                "request refused at admission: estimated wait for the "
+                "queued work ahead already exceeds the deadline budget")
         if self._outcome == REJECTED:
             raise RequestRejected("request refused at admission "
                                   "(lane full)")
@@ -172,10 +190,12 @@ class ServedRequest:
 
     def missed_deadline(self) -> bool:
         """True when the request did not complete inside its deadline —
-        dropped (expired) or completed late."""
+        dropped (expired), refused for a hopeless wait, or completed
+        late."""
         if self.deadline_s is None or self.t_done is None:
             return False
-        return self._outcome == EXPIRED or self.t_done > self.deadline_s
+        return (self._outcome in (EXPIRED, REJECTED_WAIT)
+                or self.t_done > self.deadline_s)
 
     def phase_s(self) -> dict[str, float | None]:
         """The latency split the four timestamps define: ``queueing``
@@ -210,7 +230,8 @@ class ClassStats:
     completed: int = 0
     failed: int = 0
     expired: int = 0        # dropped on deadline while queued/assembling
-    rejected: int = 0       # refused at admission
+    rejected: int = 0       # refused at admission (full lane)
+    rejected_wait: int = 0  # refused: estimated wait > deadline budget
     late: int = 0           # completed, but after the deadline
     armed: bool = False     # any submission of this class carried a deadline
     queueing_s: list = dataclasses.field(default_factory=list)
@@ -220,14 +241,16 @@ class ClassStats:
 
     @property
     def resolved(self) -> int:
-        return self.completed + self.failed + self.expired + self.rejected
+        return (self.completed + self.failed + self.expired
+                + self.rejected + self.rejected_wait)
 
     @property
     def drop_rate(self) -> float:
         """Fraction of submissions dropped/refused without compute."""
         if self.submitted == 0:
             return 0.0
-        return (self.expired + self.rejected) / self.submitted
+        return (self.expired + self.rejected
+                + self.rejected_wait) / self.submitted
 
     @property
     def slo_miss_rate(self) -> float:
@@ -237,7 +260,8 @@ class ClassStats:
         miss; their admission rejections count only in drop_rate)."""
         if self.submitted == 0 or not self.armed:
             return 0.0
-        return (self.expired + self.rejected + self.late) / self.submitted
+        return (self.expired + self.rejected + self.rejected_wait
+                + self.late) / self.submitted
 
     def phase_percentiles(self) -> dict[str, dict[str, float]]:
         """{'queueing'|'assembly'|'compute'|'total': {p50,p95,p99,mean}}
@@ -258,7 +282,8 @@ class FrontendStats:
     completed: int = 0
     failed: int = 0              # requests resolved with an error
     expired: int = 0             # dropped on deadline (SLO miss)
-    rejected: int = 0            # refused at admission
+    rejected: int = 0            # refused at admission (full lane)
+    rejected_wait: int = 0       # refused: estimated wait > deadline budget
     batches: int = 0
     flushes_full: int = 0        # batches flushed at batch_size
     flushes_timeout: int = 0     # batches flushed by max_wait_ms
@@ -272,7 +297,8 @@ class FrontendStats:
     def resolved(self) -> int:
         """Requests that reached *any* terminal outcome; close() waits
         for this to reconcile exactly with ``submitted``."""
-        return self.completed + self.failed + self.expired + self.rejected
+        return (self.completed + self.failed + self.expired
+                + self.rejected + self.rejected_wait)
 
     def klass(self, name: str) -> ClassStats:
         cs = self.classes.get(name)
@@ -315,16 +341,50 @@ class AsyncFrontend:
     ``priority`` orders lanes (higher drains first); ``deadline_ms``
     arms drop-on-SLO-miss and the expedited flush. Both default to the
     PR-3 behaviour: one best-effort FIFO class.
+
+    ``estimator`` is the shared :class:`ServiceTimeEstimator` driving
+    the expedited flush (and admission); one is created per frontend if
+    not given, self-warming from observed batches. The serve paths warm
+    it from the calibration pass (``batch / measured_steady_fps``).
+    ``admission_control=True`` enables estimated-wait admission:
+    a deadline-armed request is refused (``rejected_wait``) when the
+    estimator prices the queued work ahead of it past its deadline
+    budget. ``flush_guard_ms`` is the safety margin the expedited flush
+    (and admission) keeps against the estimate; ``None`` adapts it to
+    25% of the estimate + 2 ms. Deadline-less requests are untouched by
+    all three knobs — the PR-3/PR-4 best-effort path is unchanged.
     """
 
     def __init__(self, executor, *, max_wait_ms: float = 5.0,
-                 max_queue: int = 256):
+                 max_queue: int = 256,
+                 estimator: ServiceTimeEstimator | None = None,
+                 admission_control: bool = False,
+                 flush_guard_ms: float | None = None):
         if getattr(executor, "on_result", None) is not None:
             raise ValueError("executor already has an on_result consumer")
         self.executor = executor
         self.batch_size = int(executor.batch_size)
         self.max_wait_s = float(max_wait_ms) / 1e3
         self.max_queue = max(1, int(max_queue))
+        self.estimator = (estimator if estimator is not None
+                          else ServiceTimeEstimator())
+        self.admission_control = bool(admission_control)
+        self.flush_guard_s = (None if flush_guard_ms is None
+                              else float(flush_guard_ms) / 1e3)
+        # Micro-batches dispatched but not yet resolved, and frames the
+        # batcher has popped into its currently-assembling batch (both
+        # guarded by _lock); work in either place is ahead of a new
+        # request but visible in neither the lanes nor the executor, so
+        # admission must price it explicitly.
+        self._inflight_batches = 0
+        self._assembling = 0
+        # Second estimator channel: the *completion window* (gap between
+        # consecutive batch completions while another batch was still in
+        # flight) — the executor's throughput beat, which is what a
+        # backlog drains at. Distinct from the latency key because a
+        # K-stage pipeline's traversal latency is ~K windows.
+        self._window_key = window_key(self.batch_size)
+        self._last_done: float | None = None
         self.stats = FrontendStats()
         self._closing = threading.Event()
         self._lock = threading.Lock()
@@ -383,9 +443,18 @@ class AsyncFrontend:
         with self._lane_cv:
             if self._closing.is_set():
                 raise RuntimeError("frontend is closed")
+            # Estimated-wait admission: a deadline-armed request whose
+            # budget the queued work ahead already exhausts fails fast
+            # (rejected_wait) instead of expiring in queue. Checked
+            # before the capacity wait — blocking on a full lane only
+            # to expire afterwards would be the worst of both.
+            if self._hopeless(req):
+                self._reject_wait(req)
+                return req
             lane = self._lanes.get(req.priority)
             if lane is None:
                 lane = self._lanes[req.priority] = collections.deque()
+            wait_blocked = False
             while len(lane) >= self.max_queue:
                 if not block:
                     self._admit(req)
@@ -398,10 +467,18 @@ class AsyncFrontend:
                              else deadline - time.perf_counter())
                 if remaining is not None and remaining <= 0:
                     raise queue.Full
+                wait_blocked = True
                 if not self._lane_cv.wait(timeout=remaining):
                     raise queue.Full
                 if self._closing.is_set():
                     raise RuntimeError("frontend is closed")
+            # Re-price after any backpressure wait: the verdict from
+            # before the block is stale — the deadline budget shrank
+            # and other producers refilled the queues — and enqueueing
+            # on it would let an admitted request expire in queue.
+            if wait_blocked and self._hopeless(req):
+                self._reject_wait(req)
+                return req
             self._admit(req)
             lane.append((req, req_frame))
             self._lane_cv.notify_all()
@@ -416,6 +493,100 @@ class AsyncFrontend:
                 cs.armed = True
             if self.stats._t_first is None:
                 self.stats._t_first = req.t_submit
+
+    # -- adaptive control (estimator-driven) ---------------------------------
+
+    def _guard_s(self, est: float) -> float:
+        """Safety margin kept against the service-time estimate: covers
+        batcher poll cadence, host stacking/quantize, and estimator
+        noise. Fixed when the caller pinned ``flush_guard_ms``, else
+        25% of the estimate + 2 ms."""
+        if self.flush_guard_s is not None:
+            return self.flush_guard_s
+        return 0.25 * est + 0.002
+
+    def _urgent_at(self, req: ServedRequest) -> float:
+        """The instant the batcher must flush a batch holding ``req``
+        (inf for best-effort requests): ``est_service + guard`` before
+        the deadline once the estimator has a measurement, else the
+        static fallback of 80% of the deadline budget spent."""
+        if req.deadline_s is None:
+            return float("inf")
+        est = self.estimator.estimate(self.batch_size)
+        if est is None:
+            return req.deadline_s - DEADLINE_GUARD_FRAC * (req.deadline_s
+                                                           - req.t_submit)
+        return req.deadline_s - (est + self._guard_s(est))
+
+    def estimated_wait_s(self, priority: int) -> float | None:
+        """Estimated completion time (seconds from now) of a request
+        entering the ``priority`` lane now:
+        ``(backlog_batches - 1) * est_window + est_latency``. The work
+        ahead — in-flight micro-batches plus the batches the queued
+        frames at this priority or higher will form — drains one per
+        *completion window* (EWMA of busy inter-completion gaps; a
+        pipelined executor overlaps in-flight batches, so pricing them
+        serially at full latency would refuse servable requests), then
+        the request's own batch traverses the pipeline in
+        ``est_latency`` (EWMA of measured dispatch->done phases). For a
+        serial executor window == latency and this reduces to pricing
+        every batch at full service time; until a window gap has been
+        observed the latency estimate stands in for the window.
+        ``None`` until the estimator knows nothing at all. Caller holds
+        ``_lane_cv`` (or accepts a racy read)."""
+        lat = self.estimator.estimate(self.batch_size)
+        if lat is None:
+            return None
+        win = self.estimator.estimate(self._window_key)
+        if win is None:
+            win = lat
+        ahead = sum(len(lane) for prio, lane in self._lanes.items()
+                    if prio >= priority)
+        with self._lock:
+            inflight = self._inflight_batches
+            # The currently-assembling batch dispatches ahead of any
+            # lane content regardless of priority.
+            ahead += self._assembling
+        batches = inflight + math.ceil((ahead + 1) / self.batch_size)
+        return (batches - 1) * win + lat
+
+    def _hopeless(self, req: ServedRequest) -> bool:
+        """True when admission control applies to ``req`` and the
+        estimated wait for the work ahead of it already exceeds its
+        deadline budget (caller holds _lane_cv)."""
+        if not self.admission_control or req.deadline_s is None:
+            return False
+        wait = self.estimated_wait_s(req.priority)
+        if wait is None:
+            return False
+        est = self.estimator.estimate(self.batch_size)
+        budget = req.deadline_s - time.perf_counter()
+        return wait + self._guard_s(est) > budget
+
+    def _reject_wait(self, req: ServedRequest) -> None:
+        """Resolve ``req`` refused-for-hopeless-wait, with stats."""
+        self._admit(req)
+        req._reject(REJECTED_WAIT)
+        with self._lock:
+            self.stats.rejected_wait += 1
+            self.stats.klass(req.klass).rejected_wait += 1
+
+    def control_config(self) -> dict:
+        """The adaptive-control knobs as a JSON-ready dict — benches
+        record it so knee and QoS artifacts are comparable across PRs."""
+        est = self.estimator.estimate(self.batch_size)
+        win = self.estimator.estimate(self._window_key)
+        return {
+            "admission_control": self.admission_control,
+            "flush_guard_ms": (None if self.flush_guard_s is None
+                               else round(self.flush_guard_s * 1e3, 3)),
+            "deadline_guard_frac_fallback": DEADLINE_GUARD_FRAC,
+            "est_service_ms": (None if est is None
+                               else round(est * 1e3, 3)),
+            "est_window_ms": (None if win is None
+                              else round(win * 1e3, 3)),
+            "estimator": self.estimator.snapshot(),
+        }
 
     def close(self) -> None:
         """Stop accepting requests, flush everything queued, and wait for
@@ -535,17 +706,21 @@ class AsyncFrontend:
         deadline, then dispatch it."""
         batch = [first]
         first[0].t_batched = time.perf_counter()
+        with self._lock:
+            self._assembling = 1
         flush_at = first[0].t_submit + self.max_wait_s
         # Holding the batch into a member's deadline would turn a
         # servable request into a drop; flush with guard margin instead.
-        urgent_at = _urgent_at(first[0])
+        urgent_at = self._urgent_at(first[0])
         reason = "full"
 
         def take(nxt) -> None:
             nonlocal urgent_at
             nxt[0].t_batched = time.perf_counter()
             batch.append(nxt)
-            urgent_at = min(urgent_at, _urgent_at(nxt[0]))
+            with self._lock:
+                self._assembling = len(batch)
+            urgent_at = min(urgent_at, self._urgent_at(nxt[0]))
 
         while len(batch) < self.batch_size:
             # Fill from the queued backlog before honoring any flush
@@ -588,13 +763,20 @@ class AsyncFrontend:
             else:
                 live.append((r, f))
         if not live:
+            with self._lock:
+                self._assembling = 0
             return
         reqs = tuple(r for r, _ in live)
         t_disp = time.perf_counter()
         for r in reqs:
             r.t_dispatched = t_disp
         with self._lock:
+            # One atomic flip from assembling to in-flight: a concurrent
+            # admission check must never see this batch in neither
+            # counter (it would under-price the work ahead by a batch).
+            self._assembling = 0
             self.stats.batches += 1
+            self._inflight_batches += 1
             if len(batch) >= self.batch_size:
                 self.stats.flushes_full += 1
             elif reason == "deadline":
@@ -608,6 +790,8 @@ class AsyncFrontend:
             for r in reqs:
                 r._fail(e)
             with self._lock:
+                self._inflight_batches -= 1
+                self._last_done = None
                 self.stats.failed += len(reqs)
                 for r in reqs:
                     self.stats.klass(r.klass).failed += 1
@@ -617,7 +801,23 @@ class AsyncFrontend:
 
     def _on_result(self, tag, outputs) -> None:
         now = time.perf_counter()
+        # One observation per micro-batch: the measured compute phase
+        # (dispatch -> done) feeds the EWMA driving the next flush and
+        # admission decisions. All of a batch's requests share
+        # t_dispatched.
+        self.estimator.observe(self.batch_size, now - tag[0].t_dispatched)
         with self._lock:
+            self._inflight_batches -= 1
+            # A completion with another batch still in flight measures
+            # the executor's throughput beat (busy inter-completion
+            # gap); idle gaps say nothing about drain rate and are
+            # skipped — _last_done is cleared whenever the system
+            # drains, or the first busy completion after an idle spell
+            # would observe a "window" spanning the whole idle time.
+            if self._last_done is not None and self._inflight_batches >= 1:
+                self.estimator.observe(self._window_key,
+                                       now - self._last_done)
+            self._last_done = now if self._inflight_batches >= 1 else None
             for i, req in enumerate(tag):
                 req._resolve(outputs[i])
                 cs = self.stats.klass(req.klass)
@@ -637,6 +837,10 @@ class AsyncFrontend:
         for req in tag:
             req._fail(exc)
         with self._lock:
+            self._inflight_batches -= 1
+            # A failed batch is not a completion: the next success must
+            # not measure a "window" spanning this batch's interval.
+            self._last_done = None
             self.stats.failed += len(tag)
             for req in tag:
                 self.stats.klass(req.klass).failed += 1

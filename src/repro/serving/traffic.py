@@ -56,6 +56,13 @@ def default_mix(slo_ms: float = DEFAULT_SLO_MS) -> tuple[TrafficClass, ...]:
             TrafficClass("batch", priority=0, deadline_ms=None, share=0.75))
 
 
+def armed_class_names(mix: Sequence[TrafficClass]) -> tuple[str, ...]:
+    """Names of the deadline-armed classes in a mix — the latency-
+    sensitive slice whose SLO miss rate defines ``sustained`` for the
+    QPS-knee sweep (best-effort classes have no SLO to miss)."""
+    return tuple(c.name for c in mix if c.deadline_ms is not None)
+
+
 def parse_traffic_mix(spec: str,
                       slo_ms: float | None = None) -> tuple[TrafficClass, ...]:
     """Parse ``name:priority:share[:deadline_ms]`` comma-separated, e.g.

@@ -1,0 +1,192 @@
+"""The CI bench-regression gate (benchmarks/validate_bench.py
+--baseline): band checks over "/"-separated artifact paths, gated vs
+warn-only severity, and the committed baselines themselves — a seeded
+regression must fail, the real committed bands must be loadable and
+self-consistent."""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load_validate_bench():
+    spec = importlib.util.spec_from_file_location(
+        "validate_bench",
+        os.path.join(_ROOT, "benchmarks", "validate_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+vb = _load_validate_bench()
+
+
+ARTIFACT = {
+    "bench": "serve_async",
+    "quick": True,
+    "models": {"alexnet": {"stages": {
+        "1": {"measured_steady_fps": 50.0},
+        "4": {"measured_steady_fps": 45.0,
+              "throughput_vs_single_jit": 0.9},
+    }}},
+}
+
+
+def _baseline(gates=None, warn=None, **extra):
+    b = {"bench": "serve_async", "quick": True, "_file": "<test>"}
+    if gates:
+        b["gates"] = gates
+    if warn:
+        b["warn"] = warn
+    b.update(extra)
+    return b
+
+
+def test_lookup_walks_slash_paths_with_dotted_keys():
+    data = {"rates": {"0.6x": {"classes": {"interactive":
+                                           {"slo_miss_rate": 0.0}}}},
+            "probes": [{"arrival_fps": 10.0}]}
+    assert vb._lookup(
+        data, "rates/0.6x/classes/interactive/slo_miss_rate") == (True, 0.0)
+    assert vb._lookup(data, "probes/0/arrival_fps") == (True, 10.0)
+    assert vb._lookup(data, "rates/0.7x/anything")[0] is False
+    assert vb._lookup(data, "probes/5/arrival_fps")[0] is False
+
+
+def test_gate_passes_inside_band_and_fails_outside():
+    inside = _baseline(gates={
+        "models/alexnet/stages/4/throughput_vs_single_jit":
+            {"min": 0.5, "max": 2.0}})
+    ge, wa = vb.check_baseline(ARTIFACT, inside)
+    assert ge == [] and wa == []
+    # A seeded regression: the relative-throughput band is violated.
+    regressed = json.loads(json.dumps(ARTIFACT))
+    regressed["models"]["alexnet"]["stages"]["4"][
+        "throughput_vs_single_jit"] = 0.2
+    ge, _ = vb.check_baseline(regressed, inside)
+    assert len(ge) == 1 and "below baseline min" in ge[0]
+
+
+def test_warn_band_never_gates():
+    b = _baseline(warn={
+        "models/alexnet/stages/1/measured_steady_fps": {"min": 1e9}})
+    ge, wa = vb.check_baseline(ARTIFACT, b)
+    assert ge == []
+    assert len(wa) == 1 and "below baseline min" in wa[0]
+
+
+def test_missing_gated_path_fails_but_missing_warn_path_warns():
+    """Renaming an artifact field cannot silently disarm its gate."""
+    b = _baseline(gates={"models/alexnet/stages/4/renamed": {"min": 0}},
+                  warn={"models/alexnet/stages/1/renamed": {"min": 0}})
+    ge, wa = vb.check_baseline(ARTIFACT, b)
+    assert len(ge) == 1 and "missing" in ge[0]
+    assert len(wa) == 1 and "missing" in wa[0]
+
+
+def test_non_numeric_gated_value_fails():
+    b = _baseline(gates={"models/alexnet/stages": {"min": 0}})
+    ge, _ = vb.check_baseline(ARTIFACT, b)
+    assert len(ge) == 1 and "not a comparable number" in ge[0]
+
+
+def test_baselines_match_on_bench_kind_and_quick_flag():
+    matching = _baseline(gates={
+        "models/alexnet/stages/4/throughput_vs_single_jit": {"min": 0.5}})
+    ge, wa = vb.check_against_baselines("x.json", ARTIFACT, [matching])
+    assert ge == [] and wa == []
+    # A different bench kind's baseline never applies; with no baseline
+    # at all for this kind the gate warns (not silent, not fatal).
+    other_bench = _baseline(gates={"nope": {"min": 0}})
+    other_bench["bench"] = "serve_qos"
+    ge, wa = vb.check_against_baselines("x.json", ARTIFACT, [other_bench])
+    assert ge == []
+    assert len(wa) == 1 and "no committed baseline" in wa[0]
+    # Baselines for this kind exist but none match the quick flag: that
+    # is a gate failure — a quick-wiring regression must not silently
+    # disarm every band.
+    full_run = _baseline(gates={"nope": {"min": 0}})
+    full_run["quick"] = False
+    ge, wa = vb.check_against_baselines("x.json", ARTIFACT, [full_run])
+    assert len(ge) == 1 and "silently disarmed" in ge[0]
+
+
+def test_committed_baselines_load_and_name_their_bench():
+    """The real benchmarks/baselines/ directory: every file loads, names
+    a known bench kind, and only uses min/max bands — the gate CI runs
+    is the gate these tests exercised."""
+    baselines, errors = vb.load_baselines(
+        os.path.join(_ROOT, "benchmarks", "baselines"))
+    assert errors == []
+    assert len(baselines) >= 4, "expected a baseline per artifact kind"
+    kinds = {b["bench"] for b in baselines}
+    assert {"serve", "serve_async", "serve_qos",
+            "serve_knee"} <= kinds
+    for b in baselines:
+        for band_kind in ("gates", "warn"):
+            for path, band in b.get(band_kind, {}).items():
+                assert isinstance(path, str) and "/" in path, \
+                    f"{b['_file']}: {path!r} is not a /-separated path"
+                assert isinstance(band, dict) and band, \
+                    f"{b['_file']}: {path} band is empty"
+                assert set(band) <= {"min", "max"}, \
+                    f"{b['_file']}: {path} has unknown band keys"
+
+
+def test_validate_rejects_seeded_knee_regression(tmp_path):
+    """End to end through validate(): a knee artifact whose headline
+    contradicts its probes is rejected by schema validation alone."""
+    good = {
+        "schema_version": 1, "bench": "serve_knee", "seed": 0,
+        "models": {"alexnet": {
+            "measured_steady_fps": 10.0, "modeled_fps_alg1": 100.0,
+            "batch": 8, "stages": 2, "seed": 0, "slo_ms": 500.0,
+            "miss_target": 0.01, "traffic_mix": [], "route": "f32",
+            "admission_control": True,
+            "knee_qps": 12.0, "knee_of_steady": 1.2,
+            "probes": [
+                {"arrival_fps": 12.0, "sustained": True,
+                 "armed_miss_rate": 0.0, "armed_submitted": 10,
+                 "submitted": 40, "completed": 40, "expired": 0,
+                 "rejected": 0, "rejected_wait": 0},
+                {"arrival_fps": 24.0, "sustained": False,
+                 "armed_miss_rate": 0.5, "armed_submitted": 10,
+                 "submitted": 40, "completed": 20, "expired": 0,
+                 "rejected": 0, "rejected_wait": 20},
+            ],
+        }},
+    }
+    p = tmp_path / "BENCH_serve_knee.json"
+    p.write_text(json.dumps(good))
+    assert vb.validate(str(p)) == []
+    # Headline not backed by a sustained probe -> schema failure.
+    bad = json.loads(json.dumps(good))
+    bad["models"]["alexnet"]["knee_qps"] = 24.0
+    p.write_text(json.dumps(bad))
+    errs = vb.validate(str(p))
+    assert any("not the max sustained probe" in e for e in errs)
+    # sustained flag contradicting the miss rate -> schema failure.
+    bad = json.loads(json.dumps(good))
+    bad["models"]["alexnet"]["probes"][1]["sustained"] = True
+    p.write_text(json.dumps(bad))
+    errs = vb.validate(str(p))
+    assert any("contradicts miss" in e for e in errs)
+
+
+@pytest.mark.parametrize("band,value,ok", [
+    ({"min": 1.0}, 1.0, True),
+    ({"min": 1.0}, 0.99, False),
+    ({"max": 2.0}, 2.0, True),
+    ({"max": 2.0}, 2.01, False),
+    ({"min": 0.0, "max": 1.0}, 0.5, True),
+    ({"min": 0.0, "max": 1.0}, float("nan"), False),
+    ({"min": 0.0}, True, False),          # bools are not measurements
+    ({"min": 0.0}, "fast", False),
+])
+def test_band_edges(band, value, ok):
+    msg = vb._check_band("x", value, band)
+    assert (msg is None) == ok

@@ -1,0 +1,117 @@
+"""ServiceTimeEstimator: warm start, EWMA convergence, per-shape
+isolation, and thread-safety under concurrent observe/estimate — the
+properties the frontend's adaptive flush and admission control lean
+on."""
+
+import threading
+
+import pytest
+
+from repro.serving import ServiceTimeEstimator
+
+
+def test_empty_estimator_knows_nothing():
+    est = ServiceTimeEstimator()
+    assert est.estimate(32) is None
+    assert est.n_observed(32) == 0
+    assert est.snapshot() == {}
+
+
+def test_warm_start_seeds_and_measurements_outrank_it():
+    est = ServiceTimeEstimator()
+    est.warm_start(32, 0.050)
+    assert est.estimate(32) == pytest.approx(0.050)
+    assert est.n_observed(32) == 0           # calibration != observation
+    # A second warm start before any observation re-seeds (recalibration)
+    est.warm_start(32, 0.040)
+    assert est.estimate(32) == pytest.approx(0.040)
+    # ...but once a real batch has been observed, warm_start is a no-op:
+    # measurements outrank calibration.
+    est.observe(32, 0.060)
+    before = est.estimate(32)
+    est.warm_start(32, 0.001)
+    assert est.estimate(32) == pytest.approx(before)
+    assert est.n_observed(32) == 1
+
+
+def test_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        ServiceTimeEstimator(alpha=0.0)
+    with pytest.raises(ValueError):
+        ServiceTimeEstimator(alpha=1.5)
+    est = ServiceTimeEstimator()
+    with pytest.raises(ValueError):
+        est.warm_start(32, 0.0)
+    # Non-positive observations (clock skew) are dropped, not folded in.
+    est.observe(32, -1.0)
+    assert est.estimate(32) is None
+
+
+def test_ewma_converges_and_tracks_a_shift():
+    est = ServiceTimeEstimator(alpha=0.3)
+    for _ in range(30):
+        est.observe(8, 0.020)
+    assert est.estimate(8) == pytest.approx(0.020, rel=1e-6)
+    # The backend slows down 2x; the EWMA tracks it within ~10 batches.
+    for _ in range(10):
+        est.observe(8, 0.040)
+    assert est.estimate(8) == pytest.approx(0.040, rel=0.05)
+    # First observation initializes directly (no bias toward zero).
+    fresh = ServiceTimeEstimator()
+    fresh.observe(4, 0.123)
+    assert fresh.estimate(4) == pytest.approx(0.123)
+
+
+def test_shapes_are_isolated():
+    est = ServiceTimeEstimator()
+    est.warm_start(8, 0.010)
+    for _ in range(5):
+        est.observe(32, 0.050)
+    assert est.estimate(8) == pytest.approx(0.010)
+    assert est.estimate(32) == pytest.approx(0.050)
+    assert est.estimate(16) is None
+    assert est.n_observed(8) == 0 and est.n_observed(32) == 5
+    snap = est.snapshot()
+    assert snap["8"]["warm_started"] and not snap["32"]["warm_started"]
+    assert snap["32"]["n_observed"] == 5
+
+
+def test_thread_safety_under_concurrent_observe_and_estimate():
+    """8 writer threads x 500 observations per shape, concurrent readers:
+    no exception, every observation counted, and the final estimate sits
+    inside the observed range (a torn read/write would escape it)."""
+    est = ServiceTimeEstimator(alpha=0.5)
+    n_threads, n_obs = 8, 500
+    lo, hi = 0.010, 0.030
+    errors = []
+
+    def writer(shape):
+        try:
+            for i in range(n_obs):
+                est.observe(shape, lo + (hi - lo) * (i % 10) / 9)
+        except BaseException as e:  # noqa: BLE001 - surfaced to the test
+            errors.append(e)
+
+    def reader():
+        try:
+            for _ in range(n_obs):
+                for shape in (0, 1, 2, 3):
+                    v = est.estimate(shape)
+                    assert v is None or lo <= v <= hi
+                est.snapshot()
+        except BaseException as e:  # noqa: BLE001 - surfaced to the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(p % 4,))
+               for p in range(n_threads)]
+    threads += [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "estimator thread hung"
+    assert not errors, f"concurrent access raised: {errors}"
+    assert sum(est.n_observed(s) for s in (0, 1, 2, 3)) == \
+        n_threads * n_obs
+    for shape in (0, 1, 2, 3):
+        assert lo <= est.estimate(shape) <= hi

@@ -1,8 +1,10 @@
 """QoS frontend: priority lanes, deadlines, drop-on-SLO-miss, the four
 request timestamps, per-class phase-split stats, and the seeded traffic
 generator. The acceptance pins: a low-priority flood cannot starve
-high-priority requests past their deadline, and an expired request
-resolves with the ``expired`` outcome instead of hanging."""
+high-priority requests past their deadline, an expired request
+resolves with the ``expired`` outcome instead of hanging, and — with
+estimated-wait admission on an exact estimator — no request both passes
+admission and later expires in queue."""
 
 import threading
 import time
@@ -11,7 +13,8 @@ import numpy as np
 import pytest
 
 from repro.serving import (AsyncFrontend, DeadlineExpired, RequestRejected,
-                           TrafficClass, default_mix, make_schedule,
+                           ServiceTimeEstimator, TrafficClass,
+                           armed_class_names, default_mix, make_schedule,
                            parse_traffic_mix, replay)
 
 
@@ -248,6 +251,138 @@ def test_deadline_expedites_flush():
 
 
 # ---------------------------------------------------------------------------
+# Adaptive control: EWMA flush + estimated-wait admission
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_hopeless_request_at_submit():
+    """With ~500ms of queued work ahead priced by an exact estimator, a
+    100ms-deadline request is refused at submit (rejected_wait) instead
+    of expiring in queue; an ample-budget request sails through."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.05)
+    est = ServiceTimeEstimator()
+    est.warm_start(4, 0.05)
+    fe = AsyncFrontend(ex, max_wait_ms=5.0, estimator=est,
+                       admission_control=True, flush_guard_ms=10.0)
+    flood = [fe.submit(f) for f in _frames(40)]   # ~10 batches queued
+    doomed = fe.submit(FRAME, deadline_ms=100.0, klass="doomed")
+    assert doomed.outcome == "rejected_wait"
+    assert doomed.done() and doomed.missed_deadline()
+    assert doomed.t_batched is None               # never entered a lane
+    with pytest.raises(RequestRejected):
+        doomed.result(timeout=1)
+    ok = fe.submit(FRAME, deadline_ms=10_000.0, klass="ok")
+    for r in flood:
+        r.result(timeout=30)
+    assert np.asarray(ok.result(timeout=30)).shape == FRAME.shape
+    fe.close()
+    st = fe.stats
+    assert st.resolved == st.submitted == 42
+    assert st.rejected_wait == 1 and st.expired == 0
+    cs = st.klass("doomed")
+    assert cs.rejected_wait == 1 and cs.armed
+    assert cs.slo_miss_rate == 1.0 and cs.drop_rate == 1.0
+    assert st.klass("ok").completed == 1
+
+
+def test_admission_prices_only_work_at_or_above_own_priority():
+    """A best-effort flood in the low lane must not scare admission off
+    a high-priority request — the priority lanes will serve it first, so
+    only work at its own priority or higher (plus in-flight batches) is
+    ahead of it."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.05)
+    est = ServiceTimeEstimator()
+    est.warm_start(4, 0.05)
+    fe = AsyncFrontend(ex, max_wait_ms=10.0, estimator=est,
+                       admission_control=True, flush_guard_ms=10.0)
+    flood = [fe.submit(f, priority=0, klass="lo") for f in _frames(40)]
+    time.sleep(0.02)
+    hi = fe.submit(FRAME, priority=2, deadline_ms=450.0, klass="hi")
+    assert hi.outcome != "rejected_wait"          # admitted
+    out = hi.result(timeout=10)
+    assert hi.outcome == "completed" and not hi.missed_deadline()
+    np.testing.assert_array_equal(out, FRAME)
+    for r in flood:
+        r.result(timeout=30)
+    fe.close()
+    assert fe.stats.rejected_wait == 0
+    assert fe.stats.resolved == fe.stats.submitted == 41
+
+
+def test_admission_disabled_keeps_expiry_behaviour():
+    """admission_control=False (the default) is the PR-4 contract: the
+    same hopeless request is accepted and expires in queue."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.05)
+    est = ServiceTimeEstimator()
+    est.warm_start(4, 0.05)
+    fe = AsyncFrontend(ex, max_wait_ms=5.0, estimator=est,
+                       flush_guard_ms=10.0)
+    flood = [fe.submit(f) for f in _frames(40)]
+    doomed = fe.submit(FRAME, deadline_ms=100.0)
+    with pytest.raises(DeadlineExpired):
+        doomed.result(timeout=10)
+    assert doomed.outcome == "expired"
+    for r in flood:
+        r.result(timeout=30)
+    fe.close()
+    assert fe.stats.rejected_wait == 0 and fe.stats.expired == 1
+
+
+def test_ewma_flush_replaces_fixed_guard_when_estimator_is_warm():
+    """A lone deadline-armed request in a quiet frontend is parked until
+    est_service + guard before its deadline — substantially *later* than
+    the fixed 80%-of-budget fallback — and still completes in time."""
+    ex = EchoExecutor(batch_size=8)                 # instant service
+    est = ServiceTimeEstimator()
+    est.warm_start(8, 0.010)
+    fe = AsyncFrontend(ex, max_wait_ms=10_000.0, estimator=est,
+                       flush_guard_ms=300.0)
+    t0 = time.perf_counter()
+    req = fe.submit(FRAME, deadline_ms=3_000.0)
+    req.result(timeout=10)
+    elapsed = time.perf_counter() - t0
+    fe.close()
+    assert req.outcome == "completed"
+    assert not req.missed_deadline()
+    # Fixed-guard fallback would have flushed at 2400ms; the estimator
+    # holds the batch open until ~2690ms (more assembly opportunity).
+    # The ~310ms slack before the deadline absorbs scheduler stalls on
+    # a starved shared runner — this runs in the blocking tier-1 lane.
+    assert elapsed > 2.5
+    assert fe.stats.flushes_deadline == 1
+
+
+def test_saturating_flood_admitted_requests_never_expire_in_queue():
+    """The admission property pinned by the acceptance criteria: under a
+    saturating deadline-armed flood with an *exact* estimator (the fake
+    executor's service time is deterministic and warm-started verbatim),
+    every request either completes or is refused at submit — zero
+    requests pass admission and then expire in queue."""
+    ex = EchoExecutor(batch_size=4, delay_s=0.05)
+    est = ServiceTimeEstimator()
+    est.warm_start(4, 0.05)
+    fe = AsyncFrontend(ex, max_wait_ms=5.0, max_queue=1024,
+                       estimator=est, admission_control=True,
+                       flush_guard_ms=25.0)
+    # 60 frames = 15 batches = 750ms of work at a 400ms deadline: the
+    # early fraction is servable, the tail is hopeless.
+    reqs = [fe.submit(f, deadline_ms=400.0, klass="rt")
+            for f in _frames(60)]
+    for r in reqs:
+        assert r._event.wait(timeout=30), "request hung"
+    fe.close()
+    st = fe.stats
+    assert st.resolved == st.submitted == 60
+    assert st.expired == 0, \
+        f"{st.expired} admitted requests expired in queue"
+    assert st.rejected_wait > 0            # the hopeless tail failed fast
+    assert st.completed > 0                # the servable head completed
+    assert st.completed + st.rejected_wait == 60
+    for r in reqs:
+        assert r.outcome in ("completed", "rejected_wait")
+
+
+# ---------------------------------------------------------------------------
 # Timestamps + per-class stats
 # ---------------------------------------------------------------------------
 
@@ -352,6 +487,12 @@ def test_parse_traffic_mix():
         parse_traffic_mix("a:0:1:slo")       # 'slo' needs an slo_ms
     with pytest.raises(ValueError):
         parse_traffic_mix("a:0:1:slo", slo_ms=0.0)
+
+
+def test_armed_class_names():
+    mix = default_mix(slo_ms=100.0)
+    assert armed_class_names(mix) == ("interactive",)
+    assert armed_class_names(parse_traffic_mix("a:0:1,b:1:1")) == ()
 
 
 def test_replay_resolves_every_request():

@@ -14,7 +14,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.serving import AsyncFrontend
+from repro.serving import AsyncFrontend, ServiceTimeEstimator
 
 N_PRODUCERS = 8
 N_FRAMES = 64
@@ -105,6 +105,52 @@ def test_multi_producer_no_hang_fifo_and_reconciled_stats():
         for a, b in zip(reqs[p], reqs[p][1:]):
             assert a.t_batched <= b.t_batched
             assert a.t_done <= b.t_done
+
+
+def test_multi_producer_admission_control_reconciles():
+    """8 producers flooding tight deadlines through estimated-wait
+    admission: every request resolves to exactly one of
+    completed | expired | rejected_wait (no hangs), the outcome counts
+    reconcile exactly, and the hopeless tail is refused at submit (the
+    flood queues far more work than a 150ms budget can absorb, so
+    admission must fire)."""
+    ex = SlowEchoExecutor(batch_size=16, delay_s=0.01)
+    est = ServiceTimeEstimator()
+    est.warm_start(16, ex.delay_s)
+    fe = AsyncFrontend(ex, max_wait_ms=20.0, max_queue=1024,
+                       estimator=est, admission_control=True,
+                       flush_guard_ms=5.0)
+
+    reqs = _run_producers(
+        fe, lambda p, i: fe.submit(_frame(p, i), deadline_ms=150.0,
+                                   timeout=30, klass=f"rt{p}"))
+    for p in range(N_PRODUCERS):
+        for r in reqs[p]:
+            assert r._event.wait(timeout=60), "request hung"
+    fe.close()
+
+    total = N_PRODUCERS * N_FRAMES
+    st = fe.stats
+    assert st.submitted == total
+    assert st.failed == st.rejected == 0
+    assert st.completed + st.expired + st.rejected_wait == total
+    assert st.resolved == total
+    # 512 frames = 32 batches x 10ms ~= 320ms of queued work against
+    # 150ms budgets: the estimator must refuse part of the flood.
+    assert st.rejected_wait > 0, \
+        "admission never fired under a saturating flood"
+    assert st.completed > 0
+    # Per-class reconciliation and per-request terminal outcomes.
+    assert sum(cs.submitted for cs in st.classes.values()) == total
+    assert sum(cs.resolved for cs in st.classes.values()) == total
+    for p in range(N_PRODUCERS):
+        for i, r in enumerate(reqs[p]):
+            assert r.outcome in ("completed", "expired", "rejected_wait")
+            if r.outcome == "completed":
+                np.testing.assert_array_equal(
+                    np.asarray(r.result(timeout=1)), _frame(p, i))
+            else:
+                assert r.missed_deadline()
 
 
 def test_multi_producer_mixed_deadlines_reconcile():
