@@ -37,7 +37,7 @@ bench-quick:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_bench.py --quick --out BENCH_serve.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --quick --out BENCH_serve_async.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --quick --out BENCH_serve_qos.json
-	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --quick --out BENCH_serve_knee.json
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --quick --arrival poisson --replicas-sweep 1,2,4 --out BENCH_serve_knee.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
 	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py --baseline benchmarks/baselines BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json
 
@@ -57,6 +57,14 @@ bench-qos:
 .PHONY: bench-knee
 bench-knee:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --out BENCH_serve_knee.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_knee.json
+
+# Knee-vs-R replication sweep (the PR headline): 4 forced host devices,
+# R in {1,2,4} routed replicas, uniform + poisson arrivals. R>1 brackets
+# open at the R=1 knee, so knee(R=2) >= knee(R=1) is probed directly.
+.PHONY: bench-knee-scaling
+bench-knee-scaling:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --arrival poisson --replicas-sweep 1,2,4 --out BENCH_serve_knee.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_knee.json
 
 .PHONY: lint

@@ -52,6 +52,17 @@ def main(argv=None) -> int:
                              "roofline", "kernels"))
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI setting (AlexNet-only, small batch)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="[serve-knee] pipeline replicas behind the "
+                         "least-wait router")
+    ap.add_argument("--replicas-sweep", default=None,
+                    dest="replicas_sweep",
+                    help="[serve-knee] comma list (e.g. 1,2,4): "
+                         "knee-vs-R scaling sweep")
+    ap.add_argument("--arrival", default="uniform",
+                    choices=("uniform", "poisson"),
+                    help="[serve-knee] 'poisson' adds a bursty "
+                         "<model>:poisson row beside the uniform knee")
     args = ap.parse_args(argv)
     only = args.which
 
@@ -69,7 +80,12 @@ def main(argv=None) -> int:
         serve_qos_bench.run(emit, quick=args.quick)
     if only in ("all", "serve-knee"):
         from benchmarks import serve_knee_bench
-        serve_knee_bench.run(emit, quick=args.quick)
+        serve_knee_bench.run(
+            emit, quick=args.quick, replicas=args.replicas,
+            arrival=args.arrival,
+            replicas_sweep=([int(r) for r in
+                             args.replicas_sweep.split(",")]
+                            if args.replicas_sweep else None))
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run_objectives(emit)

@@ -14,7 +14,21 @@ config (admission, flush guard, estimator warm start), and the seed
 that replays the exact schedule. Built, schema-validated, gated against
 ``benchmarks/baselines/`` and uploaded by the CI bench-smoke job.
 
-  PYTHONPATH=src:. python benchmarks/serve_knee_bench.py --quick  # CI
+Two extensions ride on the same sweep:
+
+* ``--arrival poisson`` additionally benches the knee under Poisson
+  (exponential inter-arrival) traffic and records it as a
+  ``<model>:poisson`` row alongside the uniform knee — burstiness costs
+  capacity, and the artifact shows how much;
+* ``--replicas-sweep 1,2,4`` runs the knee-vs-R scaling sweep through a
+  routed :class:`repro.serving.ReplicaPool` (R>1 brackets open at the
+  R=1 knee, so "replication never loses to one replica" is probed
+  directly) and records a ``knee_scaling`` block per model —
+  schema-validated and gated (``knee_r2 / knee_r1 >= 1``) in CI under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+  PYTHONPATH=src:. python benchmarks/serve_knee_bench.py --quick \
+      --arrival poisson --replicas-sweep 1,2,4                   # CI
   PYTHONPATH=src:. python benchmarks/serve_knee_bench.py          # full
 """
 
@@ -41,19 +55,24 @@ def bench_model(model: str, *, batch: int, frames: int | None,
                 traffic_mix, miss_target: float, refine_iters: int,
                 max_factor: float, flush_guard_ms: float | None,
                 admission_control: bool, place_stages: bool,
-                poisson: bool) -> dict:
+                poisson: bool, program=None, replicas: int = 1,
+                replica_mode: str = "pipeline",
+                start_qps: float | None = None) -> dict:
     """One model: throughput phase + the bracketing QPS sweep, over one
-    compiled program."""
-    prog = compile_for_serving(model, bits=8, seed=seed)
+    compiled program (pass ``program`` to reuse it across the arrival
+    and replica variants)."""
+    if program is None:
+        program = compile_for_serving(model, bits=8, seed=seed)
     n = frames if frames is not None else (6 + 2 * stages) * batch
     return serve_knee(model, frames=n, batch=batch, stages=stages,
                       seed=seed, slo_ms=slo_ms, traffic_mix=traffic_mix,
                       miss_target=miss_target, refine_iters=refine_iters,
-                      max_factor=max_factor,
+                      max_factor=max_factor, start_qps=start_qps,
                       flush_guard_ms=flush_guard_ms,
                       admission_control=admission_control,
                       place_stages=place_stages, poisson=poisson,
-                      program=prog, verbose=True)
+                      replicas=replicas, replica_mode=replica_mode,
+                      program=program, verbose=True)
 
 
 def run(emit, *, quick: bool = False, batch: int | None = None,
@@ -65,13 +84,25 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         refine_iters: int | None = None, max_factor: float = 8.0,
         flush_guard_ms: float | None = None,
         admission_control: bool = True,
-        place_stages: bool = False, poisson: bool = False) -> dict:
+        place_stages: bool = False, poisson: bool = False,
+        arrival: str = "uniform", replicas: int = 1,
+        replica_mode: str = "pipeline",
+        replicas_sweep: list[int] | None = None) -> dict:
+    if arrival not in ("uniform", "poisson"):
+        raise ValueError(f"unknown arrival {arrival!r}")
     if models is None:
         models = ["alexnet"] if quick else list(W.CNN_MODELS)
     if batch is None:
         batch = 8 if quick else 32
     if refine_iters is None:
         refine_iters = 2 if quick else 3
+    if replicas_sweep is not None:
+        replicas_sweep = sorted({int(r) for r in replicas_sweep})
+        if any(r < 1 for r in replicas_sweep):
+            raise ValueError(f"replicas_sweep={replicas_sweep} has R < 1")
+        if 1 not in replicas_sweep:
+            raise ValueError("replicas_sweep needs the R=1 baseline "
+                             "(knee_vs_r1 is a ratio against it)")
     mix = (parse_traffic_mix(traffic_mix_spec, slo_ms)
            if traffic_mix_spec else None)
     data: dict = {
@@ -84,6 +115,11 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         "seed": seed,              # replays params, calibration, frames
         "slo_ms": slo_ms,          # and every probe's arrival schedule
         "poisson": poisson,
+        "arrival": arrival,
+        "replicas": replicas,
+        "replica_mode": replica_mode,
+        "replicas_sweep": replicas_sweep,
+        "device_count": jax.device_count(),
         "miss_target": miss_target,
         "max_factor": max_factor,
         "refine_iters": refine_iters,
@@ -96,19 +132,79 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         "host": platform.machine(),
         "models": {},
     }
+    common = dict(batch=batch, frames=frames, stages=stages, seed=seed,
+                  slo_ms=slo_ms, traffic_mix=mix, miss_target=miss_target,
+                  refine_iters=refine_iters, max_factor=max_factor,
+                  flush_guard_ms=flush_guard_ms,
+                  admission_control=admission_control,
+                  place_stages=place_stages)
+    base_poisson = poisson     # legacy flag: the base sweep is bursty
     for model in models:
-        row = bench_model(model, batch=batch, frames=frames, stages=stages,
-                          seed=seed, slo_ms=slo_ms, traffic_mix=mix,
-                          miss_target=miss_target,
-                          refine_iters=refine_iters, max_factor=max_factor,
-                          flush_guard_ms=flush_guard_ms,
-                          admission_control=admission_control,
-                          place_stages=place_stages, poisson=poisson)
+        prog = compile_for_serving(model, bits=8, seed=seed)
+        row = bench_model(model, poisson=base_poisson, program=prog,
+                          replicas=replicas, replica_mode=replica_mode,
+                          **common)
         data["models"][model] = row
         emit(f"serve_knee/{model}/knee_qps", 0.0,
              f"{row['knee_qps']}qps|x{row['knee_of_steady']}_of_steady|"
              f"miss={row['knee_miss_rate']}|"
              f"probes={len(row['probes'])}")
+        # Variant rows (bursty arrival, R>1 replicas) hold the base
+        # row's *resolved* SLO constant: re-deriving per variant would
+        # tighten the budget as fleet steady grows with R (per-batch
+        # traversal latency does not shrink), so each row would measure
+        # a different contract and the knee ratios would be meaningless.
+        pinned = dict(common)
+        if pinned["slo_ms"] is None:
+            pinned["slo_ms"] = row["slo_ms"]
+        if arrival == "poisson" and not base_poisson:
+            # Bursty variant of the same sweep: exponential inter-arrival
+            # gaps from the same seed, recorded alongside the uniform
+            # knee so the burstiness cost is visible in the artifact.
+            prow = bench_model(model, poisson=True, program=prog,
+                               replicas=replicas,
+                               replica_mode=replica_mode, **pinned)
+            data["models"][f"{model}:poisson"] = prow
+            emit(f"serve_knee/{model}:poisson/knee_qps", 0.0,
+                 f"{prow['knee_qps']}qps|x{prow['knee_of_steady']}"
+                 f"_of_steady|probes={len(prow['probes'])}")
+        if replicas_sweep:
+            base = (row if replicas == 1
+                    else bench_model(model, poisson=base_poisson,
+                                     program=prog, replicas=1, **pinned))
+            knee_r1 = base["knee_qps"]
+            # copy: base may be the model row itself, which grows the
+            # knee_scaling block below — a cycle json.dump would reject
+            rows = {"1": dict(base)}
+            for r in replicas_sweep:
+                if r == 1:
+                    continue
+                # Open each R>1 bracket at the R=1 knee: if R replicas
+                # sustain the rate one replica topped out at, the knee
+                # ratio is >= 1 by construction of "max sustained".
+                rows[str(r)] = bench_model(
+                    model, poisson=base_poisson, program=prog,
+                    replicas=r, replica_mode=replica_mode,
+                    start_qps=knee_r1, **pinned)
+            # A row with no sustained probe has knee_qps None — keep the
+            # ratio None too (the CI gate then fails on the missing
+            # number, which is the intended signal) instead of crashing.
+            ratios = {str(r): (None if knee_r1 is None
+                               or rows[str(r)]["knee_qps"] is None
+                               else round(rows[str(r)]["knee_qps"]
+                                          / knee_r1, 4))
+                      for r in replicas_sweep if r != 1}
+            data["models"][model]["knee_scaling"] = {
+                "device_count": jax.device_count(),
+                "mode": replica_mode,
+                "rows": rows,
+                "knee_vs_r1": ratios,
+            }
+            emit(f"serve_knee/{model}/knee_scaling", 0.0,
+                 "|".join(f"r{r}={rows[str(r)]['knee_qps']}qps"
+                          + ("" if r == 1
+                             else f"(x{ratios[str(r)]})")
+                          for r in replicas_sweep))
     with open(out, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"\n[serve_knee_bench] wrote {out} ({len(data['models'])} "
@@ -148,7 +244,25 @@ def main(argv=None) -> int:
     ap.add_argument("--place-stages", action="store_true",
                     help="pin stage i to jax.devices()[i %% n]")
     ap.add_argument("--poisson", action="store_true",
-                    help="exponential inter-arrival gaps (bursty)")
+                    help="exponential inter-arrival gaps (bursty); "
+                         "same as --arrival poisson")
+    ap.add_argument("--arrival", default="uniform",
+                    choices=("uniform", "poisson"),
+                    help="'poisson' additionally records a "
+                         "<model>:poisson row beside the uniform knee")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="pipeline replicas behind the least-wait "
+                         "router (default 1 = plain PipelineExecutor)")
+    ap.add_argument("--replica-mode", default="pipeline",
+                    choices=("pipeline", "stage-shard"),
+                    dest="replica_mode",
+                    help="replica placement: whole pipeline per device "
+                         "or stages across a contiguous device slice")
+    ap.add_argument("--replicas-sweep", default=None,
+                    dest="replicas_sweep",
+                    help="comma list, e.g. 1,2,4: knee-vs-R scaling "
+                         "sweep (R>1 brackets open at the R=1 knee); "
+                         "records a knee_scaling block per model")
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--model", action="append", default=None,
                     choices=sorted(W.CNN_MODELS), dest="models")
@@ -166,7 +280,11 @@ def main(argv=None) -> int:
         miss_target=args.miss_target, refine_iters=args.refine_iters,
         max_factor=args.max_factor, flush_guard_ms=args.flush_guard_ms,
         admission_control=not args.no_admission,
-        place_stages=args.place_stages, poisson=args.poisson)
+        place_stages=args.place_stages, poisson=args.poisson,
+        arrival=args.arrival, replicas=args.replicas,
+        replica_mode=args.replica_mode,
+        replicas_sweep=([int(r) for r in args.replicas_sweep.split(",")]
+                        if args.replicas_sweep else None))
     print_csv(csv)
     return 0
 

@@ -17,7 +17,12 @@ Schemas are selected by the artifact's ``bench`` field:
   (``benchmarks/serve_qos_bench.py``);
 * ``serve_knee`` — the bracketing absolute-QPS sweep: every probe with
   its armed-class miss rate, plus the knee (max sustained QPS) as the
-  headline capacity number (``benchmarks/serve_knee_bench.py``).
+  headline capacity number (``benchmarks/serve_knee_bench.py``). An
+  optional ``knee_scaling`` block (``--replicas-sweep``) holds one full
+  knee row per replica count R plus the ``knee_vs_r1`` ratios — each R
+  row is validated recursively and the ratios must reproduce from the
+  rows' ``knee_qps``, so the CI gate on ``knee_vs_r1/2`` cannot drift
+  from the data behind it.
 
   python benchmarks/validate_bench.py BENCH_serve.json \
       BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json
@@ -69,7 +74,9 @@ REQUIRED_KNEE_MODEL_KEYS = ("measured_steady_fps", "modeled_fps_alg1",
                             "batch", "stages", "seed", "slo_ms",
                             "miss_target", "traffic_mix", "probes",
                             "knee_qps", "knee_of_steady",
-                            "admission_control", "route")
+                            "admission_control", "replicas", "route")
+REQUIRED_KNEE_SCALING_KEYS = ("device_count", "mode", "rows",
+                              "knee_vs_r1")
 REQUIRED_KNEE_PROBE_KEYS = ("arrival_fps", "sustained",
                             "armed_miss_rate", "armed_submitted",
                             "submitted", "completed", "expired",
@@ -200,10 +207,73 @@ def _validate_qos_model(name: str, row: dict, errors: list[str]) -> None:
             _validate_qos_class(f"{where}.classes.{cname}", crow, errors)
 
 
+def _validate_knee_scaling(name: str, block, errors: list[str]) -> None:
+    """The knee-vs-R sweep block: every R row is itself a full knee
+    result (validated recursively), row R must have run with R replicas,
+    and the recorded ``knee_vs_r1`` ratios must reproduce from the rows'
+    knee_qps values — a gate on ``knee_vs_r1/2`` is only meaningful if
+    the ratio cannot drift from the data it summarizes."""
+    where = f"models.{name}.knee_scaling"
+    if not isinstance(block, dict):
+        errors.append(f"{where}: block is {type(block).__name__}, "
+                      f"not object")
+        return
+    for key in REQUIRED_KNEE_SCALING_KEYS:
+        if key not in block:
+            errors.append(f"{where}: missing {key}")
+    rows = block.get("rows")
+    if not isinstance(rows, dict) or "1" not in rows:
+        errors.append(f"{where}: rows must include the R=1 baseline, "
+                      f"got {sorted(rows) if isinstance(rows, dict) else rows!r}")
+        return
+    for rk, rrow in rows.items():
+        if not isinstance(rrow, dict):
+            errors.append(f"{where}.rows.{rk}: row is "
+                          f"{type(rrow).__name__}, not object")
+            continue
+        _validate_knee_model(f"{name}.knee_scaling.rows.{rk}", rrow,
+                             errors)
+        if str(rk).isdigit() and rrow.get("replicas") != int(rk):
+            errors.append(f"{where}.rows.{rk}: replicas="
+                          f"{rrow.get('replicas')!r} does not match "
+                          f"key {rk!r}")
+    knee_r1 = rows["1"].get("knee_qps") if isinstance(rows["1"], dict) \
+        else None
+    ratios = block.get("knee_vs_r1")
+    if not isinstance(ratios, dict) or not ratios:
+        errors.append(f"{where}: empty or missing knee_vs_r1")
+        return
+    for rk, ratio in ratios.items():
+        rwhere = f"{where}.knee_vs_r1.{rk}"
+        if rk not in rows:
+            errors.append(f"{rwhere}: no matching rows entry")
+            continue
+        knee_r = rows[rk].get("knee_qps") \
+            if isinstance(rows[rk], dict) else None
+        if ratio is None:
+            # Legitimate only when the sweep itself found no knee for
+            # one side of the ratio; a gate on this path still fails
+            # (None is not comparable), which is the intended signal.
+            if knee_r is not None and knee_r1 is not None:
+                errors.append(f"{rwhere} is null but both knees exist "
+                              f"({knee_r} / {knee_r1})")
+            continue
+        if not isinstance(ratio, (int, float)) or ratio <= 0:
+            errors.append(f"{rwhere}={ratio!r} not > 0")
+            continue
+        if isinstance(knee_r1, (int, float)) and knee_r1 > 0 and \
+                isinstance(knee_r, (int, float)) and \
+                abs(ratio - knee_r / knee_r1) > 0.01:
+            errors.append(f"{rwhere}={ratio} does not reproduce from "
+                          f"rows ({knee_r} / {knee_r1})")
+
+
 def _validate_knee_model(name: str, row: dict, errors: list[str]) -> None:
     for key in REQUIRED_KNEE_MODEL_KEYS:
         if key not in row:
             errors.append(f"models.{name}: missing {key}")
+    if "knee_scaling" in row:
+        _validate_knee_scaling(name, row["knee_scaling"], errors)
     if not _positive(row, "measured_steady_fps"):
         errors.append(f"models.{name}.measured_steady_fps="
                       f"{row.get('measured_steady_fps')!r} not > 0")

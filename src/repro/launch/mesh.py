@@ -17,6 +17,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def device_slices(n_slices: int, devices=None) -> list[list]:
+    """Split the device list into ``n_slices`` contiguous near-equal
+    slices (sizes differ by at most one) — the replica pool's stage-shard
+    mode gives each pipeline replica one slice and stage-pipelines across
+    it. With more slices than devices, slices wrap round-robin so every
+    replica still owns a device (they then share, which is exactly the
+    forced-host-device CPU case)."""
+    if n_slices < 1:
+        raise ValueError(f"n_slices={n_slices} < 1")
+    devs = list(jax.devices() if devices is None else devices)
+    if not devs:
+        raise ValueError("no devices to slice")
+    if n_slices >= len(devs):
+        return [[devs[i % len(devs)]] for i in range(n_slices)]
+    base, extra = divmod(len(devs), n_slices)
+    out, i = [], 0
+    for s in range(n_slices):
+        k = base + (1 if s < extra else 0)
+        out.append(devs[i:i + k])
+        i += k
+    return out
+
+
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, n_pod: int = 1):
     """Small host-device mesh for tests (requires
     XLA_FLAGS=--xla_force_host_platform_device_count>=n_data*n_model*n_pod)."""

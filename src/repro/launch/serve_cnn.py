@@ -19,7 +19,12 @@ service-time estimate warm-started from the calibration pass.
 the capacity knee: the max sustained rate at which the interactive
 class misses its SLO less than ``--miss-target`` of the time.
 ``--place-stages`` pins stage i to ``jax.devices()[i % n]``
-(transparent on a single device).
+(transparent on a single device). ``--replicas R`` (with
+``--replica-mode pipeline|stage-shard``) serves through R routed
+pipeline replicas (:class:`repro.serving.ReplicaPool`): each ready
+micro-batch goes to the replica with the least estimated wait, and the
+fleet's knee scales with R on a multi-device backend (force one on CPU
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
 
 Examples (CPU):
   PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
@@ -140,6 +145,25 @@ def serve(model_name: str, *, frames: int = 64, batch: int = 16,
     return result
 
 
+def _make_executor(prog, *, stages, batch, route, output, place_stages,
+                   replicas=1, replica_mode="pipeline", seed=0):
+    """One executor for every serve path: the single
+    :class:`PipelineExecutor` when ``replicas <= 1`` (exact PR-5
+    behaviour), otherwise a :class:`ReplicaPool` of R routed replicas
+    over the device mesh (``pipeline``: whole pipeline per device;
+    ``stage-shard``: each replica stage-pipelines across its contiguous
+    device slice). The router RNG is seeded alongside everything else,
+    so cold-start placement replays."""
+    from repro.serving import PipelineExecutor, ReplicaPool
+    if replicas <= 1:
+        return PipelineExecutor(prog, stages=stages, batch_size=batch,
+                                route=route, output=output,
+                                place_stages=place_stages)
+    return ReplicaPool(prog, replicas=replicas, mode=replica_mode,
+                       stages=stages, batch_size=batch, route=route,
+                       output=output, router_seed=seed)
+
+
 def _pipeline_throughput(px, stream, batch):
     """Warmup + closed-loop steady-state throughput of one pipeline:
     one micro-batch through all K stages compiles every stage jit (stats
@@ -149,13 +173,27 @@ def _pipeline_throughput(px, stream, batch):
     then a saturating closed-loop pass. Returns (warmup_s, phase-1
     stats snapshot) — snapshotting keeps the counts describing exactly
     the window steady_fps was measured over (later frontend phases keep
-    accumulating into ``px.stats``)."""
+    accumulating into ``px.stats``). A replica pool warms every replica
+    (all R x K stage jits), so no probe ever pays a cold compile
+    mid-measurement."""
+    t0 = time.perf_counter()
+    warm = getattr(px, "warmup", None)
+    if warm is not None:
+        warm(list(stream[:batch]))
+    else:
+        px.serve(list(stream[:batch]))
+    warmup_s = time.perf_counter() - t0
+    # One more single-batch pass through the now-compiled, *empty*
+    # pipeline: the unloaded K-stage traversal. This is the honest seed
+    # for the admission latency channel — the closed-loop pass below
+    # runs saturated, so its per-batch dispatch->done times include
+    # stage-queue waits that an admitted open-loop request never sees.
     t0 = time.perf_counter()
     px.serve(list(stream[:batch]))
-    warmup_s = time.perf_counter() - t0
+    lat1_s = time.perf_counter() - t0
     px.reset_stats()
     px.serve(list(stream))
-    return warmup_s, dataclasses.replace(px.stats)
+    return warmup_s, lat1_s, dataclasses.replace(px.stats)
 
 
 def _default_max_wait_ms(batch: int, rate: float) -> float:
@@ -169,22 +207,42 @@ def _default_max_wait_ms(batch: int, rate: float) -> float:
 def _warmed_frontend(px, steady: float, rate: float, batch: int, *,
                      max_wait_ms: float | None,
                      admission_control: bool,
-                     flush_guard_ms: float | None):
+                     flush_guard_ms: float | None,
+                     lat1_s: float | None = None):
     """One convention for the per-replay control plane — shared by the
     QoS rates and the knee probes so their artifacts stay comparable: a
     fresh estimator per replay (an overload replay's noisy tail must
     not skew the next replay's admission), warm-started from the
-    measured calibration pass — the latency channel at
-    ``stages x window`` (a K-stage traversal is ~K windows), the window
-    channel at the window itself (``batch / steady``) — behind a
-    frontend whose ``max_wait`` defaults to one full-batch window at
-    the arrival rate."""
-    from repro.serving import (AsyncFrontend, ServiceTimeEstimator,
-                               window_key)
+    measured calibration throughput (:meth:`ServiceTimeEstimator
+    .warm_start_channels`) — the window channel at the fleet batch
+    window (``batch / steady``), the latency channel at
+    ``stages x replicas x window`` (a K-stage traversal is ~K windows,
+    and R-way routing multiplies each replica's per-batch beat by R) —
+    behind a frontend whose ``max_wait`` defaults to one full-batch
+    window at the arrival rate. When the calibration pass measured the
+    *unloaded* single-batch traversal (``lat1_s``), that measurement
+    replaces the formula on the latency channel: the ``K x R x window``
+    bound assumes fleet throughput scales linearly with R, which
+    overprices admission whenever replicas share silicon (the backlog
+    ahead of a request is priced separately, via the window channel, so
+    the latency channel must NOT bake queueing in). With a replica pool
+    underneath, the router's per-replica estimators get the matching
+    per-replica formula seed — router pricing is relative across
+    replicas, so a shared bias cancels — and admission itself stays on
+    the fleet numbers: the frontend's shared estimator observes the
+    interleaved completion beat of all R replicas."""
+    from repro.serving import AsyncFrontend, ServiceTimeEstimator
+    n_replicas = getattr(px, "n_replicas", 1)
     warm = batch / max(steady, 1e-9)
     est = ServiceTimeEstimator()
-    est.warm_start(batch, px.partition.n_stages * warm)
-    est.warm_start(window_key(batch), warm)
+    est.warm_start_channels(batch, warm, stages=px.partition.n_stages,
+                            replicas=n_replicas)
+    if lat1_s is not None and lat1_s > 0:
+        est.warm_start(batch, lat1_s)
+    router = getattr(px, "router", None)
+    if router is not None:
+        router.warm_start(n_replicas * warm,
+                          px.partition.n_stages * n_replicas * warm)
     wait_ms = (max_wait_ms if max_wait_ms is not None
                else _default_max_wait_ms(batch, min(rate, steady)))
     return AsyncFrontend(px, max_wait_ms=wait_ms, estimator=est,
@@ -198,6 +256,7 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
                 max_wait_ms: float | None = None,
                 arrival_fps: float | None = None,
                 place_stages: bool = False,
+                replicas: int = 1, replica_mode: str = "pipeline",
                 output: str = "top1", program=None,
                 verbose: bool = True) -> dict:
     """Serve ``frames`` synthetic frames through the K-stage pipelined
@@ -217,12 +276,13 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
        full-batch assembly window at the arrival rate.
 
     ``place_stages`` pins stage i to ``jax.devices()[i % n]``
-    (transparent on a single device). Pass ``program`` to reuse an
+    (transparent on a single device); ``replicas > 1`` serves through a
+    routed :class:`ReplicaPool` instead. Pass ``program`` to reuse an
     already-compiled program (the bench sweeps stage counts over one
     compile).
     """
-    from repro.serving import (AsyncFrontend, PipelineExecutor,
-                               TrafficClass, make_schedule, replay)
+    from repro.serving import (AsyncFrontend, TrafficClass, make_schedule,
+                               replay)
 
     if frames <= batch:
         raise ValueError(f"frames={frames} <= batch={batch}: no "
@@ -231,12 +291,13 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
         model_name, bits=bits, seed=seed, theta=theta)
     stream = synthetic_stream(model_name, frames, seed)
 
-    px = PipelineExecutor(prog, stages=stages, batch_size=batch,
-                          route=route, output=output,
-                          place_stages=place_stages)
+    px = _make_executor(prog, stages=stages, batch=batch, route=route,
+                        output=output, place_stages=place_stages,
+                        replicas=replicas, replica_mode=replica_mode,
+                        seed=seed)
     part = px.partition
     with px:
-        warmup_s, ph1 = _pipeline_throughput(px, stream, batch)
+        warmup_s, lat1_s, ph1 = _pipeline_throughput(px, stream, batch)
         steady = ph1.steady_fps
 
         # Phase 2: open-loop latency at a sustainable arrival rate, one
@@ -261,6 +322,11 @@ def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
         "stage_cycles": [round(c, 1) for c in part.stage_cycles],
         "stage_balance": round(part.balance, 4),
         "placed": place_stages,
+        "replicas": getattr(px, "n_replicas", 1),
+        "replica_mode": replica_mode if replicas > 1 else None,
+        "replica_devices": getattr(px, "replica_devices", None),
+        "replica_rows": (px.replica_rows()
+                         if hasattr(px, "replica_rows") else None),
         "frames": ph1.frames,
         "batches": ph1.batches,
         "padded_frames": ph1.padded_frames,
@@ -317,6 +383,7 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
               arrival_fps: float | None = None,
               max_wait_ms: float | None = None,
               place_stages: bool = False,
+              replicas: int = 1, replica_mode: str = "pipeline",
               poisson: bool = False,
               admission_control: bool = True,
               flush_guard_ms: float | None = None,
@@ -356,8 +423,7 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
     expiring in queue). Set ``admission_control=False`` for the
     estimator-less PR-4 admission behaviour.
     """
-    from repro.serving import (PipelineExecutor, default_mix,
-                               make_schedule, replay)
+    from repro.serving import default_mix, make_schedule, replay
 
     if frames <= batch:
         raise ValueError(f"frames={frames} <= batch={batch}: no "
@@ -366,21 +432,26 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
         model_name, bits=bits, seed=seed, theta=theta)
     stream = synthetic_stream(model_name, frames, seed)
 
-    px = PipelineExecutor(prog, stages=stages, batch_size=batch,
-                          route=route, output=output,
-                          place_stages=place_stages)
+    px = _make_executor(prog, stages=stages, batch=batch, route=route,
+                        output=output, place_stages=place_stages,
+                        replicas=replicas, replica_mode=replica_mode,
+                        seed=seed)
     part = px.partition
     rates: dict[str, dict] = {}
     with px:
-        warmup_s, ph1 = _pipeline_throughput(px, stream, batch)
+        warmup_s, lat1_s, ph1 = _pipeline_throughput(px, stream, batch)
         steady = ph1.steady_fps
         base = arrival_fps if arrival_fps is not None else steady
         if slo_ms is None:
             # A request's best case traverses assembly (~1 window) plus
             # the K-stage pipeline with its depth-2 queues; ~stages + 3
-            # windows is comfortably feasible below saturation.
-            slo_ms = round((part.n_stages + 3) * 1e3 * batch
-                           / max(steady, 1e-9), 1)
+            # windows is comfortably feasible below saturation. With R
+            # routed replicas the *fleet* window is ~R x shorter than
+            # one replica's per-batch beat, but a batch still traverses
+            # a single replica — so the traversal term scales by R.
+            slo_ms = round(
+                (part.n_stages * getattr(px, "n_replicas", 1) + 3)
+                * 1e3 * batch / max(steady, 1e-9), 1)
         mix = tuple(traffic_mix) if traffic_mix is not None \
             else default_mix(slo_ms)
 
@@ -390,7 +461,8 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
             fe = _warmed_frontend(px, steady, rate, batch,
                                   max_wait_ms=max_wait_ms,
                                   admission_control=admission_control,
-                                  flush_guard_ms=flush_guard_ms)
+                                  flush_guard_ms=flush_guard_ms,
+                                  lat1_s=lat1_s)
             schedule = make_schedule(len(stream), rate, mix, seed=seed,
                                      poisson=poisson)
             replay(fe, stream, schedule)
@@ -414,6 +486,7 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
                 "control": fe.control_config(),
                 "classes": {name: _class_row(cs)
                             for name, cs in sorted(st.classes.items())},
+                "replica_outcomes": st.replicas or None,
             }
             if verbose:
                 parts = []
@@ -440,7 +513,13 @@ def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
         "stage_balance": round(part.balance, 4),
         "placed": place_stages,
         "stage_devices": ([str(d) for d in px.stage_devices]
-                          if place_stages else None),
+                          if place_stages and hasattr(px, "stage_devices")
+                          else None),
+        "replicas": getattr(px, "n_replicas", 1),
+        "replica_mode": replica_mode if replicas > 1 else None,
+        "replica_devices": getattr(px, "replica_devices", None),
+        "replica_rows": (px.replica_rows()
+                         if hasattr(px, "replica_rows") else None),
         "seed": seed,
         "slo_ms": slo_ms,
         "poisson": poisson,
@@ -463,12 +542,14 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
                traffic_mix=None,
                miss_target: float = 0.01,
                start_factor: float = 0.5,
+               start_qps: float | None = None,
                max_factor: float = 4.0,
                refine_iters: int = 3,
                max_wait_ms: float | None = None,
                flush_guard_ms: float | None = None,
                admission_control: bool = True,
                place_stages: bool = False,
+               replicas: int = 1, replica_mode: str = "pipeline",
                poisson: bool = False,
                output: str = "top1", program=None,
                verbose: bool = True) -> dict:
@@ -492,9 +573,15 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
     expired + refused at admission (``rejected_wait``, or ``rejected``
     on a full lane) + served late — so failing fast cannot launder the
     miss rate.
+
+    ``replicas > 1`` sweeps the same knee over a routed
+    :class:`ReplicaPool`; ``start_qps`` opens the bracket at an absolute
+    rate instead of ``start_factor * steady`` — the knee-vs-R scaling
+    sweep starts each R>1 bracket at the R=1 knee, so "replication never
+    loses to one replica" is probed directly.
     """
-    from repro.serving import (PipelineExecutor, armed_class_names,
-                               default_mix, make_schedule, replay)
+    from repro.serving import (armed_class_names, default_mix,
+                               make_schedule, replay)
 
     if frames <= batch:
         raise ValueError(f"frames={frames} <= batch={batch}: no "
@@ -505,17 +592,22 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
         model_name, bits=bits, seed=seed, theta=theta)
     stream = synthetic_stream(model_name, frames, seed)
 
-    px = PipelineExecutor(prog, stages=stages, batch_size=batch,
-                          route=route, output=output,
-                          place_stages=place_stages)
+    px = _make_executor(prog, stages=stages, batch=batch, route=route,
+                        output=output, place_stages=place_stages,
+                        replicas=replicas, replica_mode=replica_mode,
+                        seed=seed)
     part = px.partition
     probes: list[dict] = []
     with px:
-        warmup_s, ph1 = _pipeline_throughput(px, stream, batch)
+        warmup_s, lat1_s, ph1 = _pipeline_throughput(px, stream, batch)
         steady = ph1.steady_fps
         if slo_ms is None:
-            slo_ms = round((part.n_stages + 3) * 1e3 * batch
-                           / max(steady, 1e-9), 1)
+            # Same budget convention as serve_qos: traversal is through
+            # ONE replica, so the term scales by R even though the fleet
+            # window (batch / steady) shrinks with R.
+            slo_ms = round(
+                (part.n_stages * getattr(px, "n_replicas", 1) + 3)
+                * 1e3 * batch / max(steady, 1e-9), 1)
         mix = tuple(traffic_mix) if traffic_mix is not None \
             else default_mix(slo_ms)
         armed = armed_class_names(mix)
@@ -528,7 +620,8 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
             fe = _warmed_frontend(px, steady, rate, batch,
                                   max_wait_ms=max_wait_ms,
                                   admission_control=admission_control,
-                                  flush_guard_ms=flush_guard_ms)
+                                  flush_guard_ms=flush_guard_ms,
+                                  lat1_s=lat1_s)
             schedule = make_schedule(len(stream), rate, mix, seed=seed,
                                      poisson=poisson)
             replay(fe, stream, schedule)
@@ -572,12 +665,14 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
                       + (f"{p95_ms:.1f}ms" if p95_ms is not None else "n/a"))
             return row
 
-        # Bracket: escalate from start_factor * steady by doubling until
-        # the armed miss rate crosses the target (or the cap), then
-        # bisect [highest sustained, lowest unsustained].
-        cap = max_factor * steady
+        # Bracket: escalate from start_factor * steady (or the absolute
+        # start_qps) by doubling until the armed miss rate crosses the
+        # target (or the cap), then bisect [highest sustained, lowest
+        # unsustained].
+        cap = max(max_factor * steady,
+                  start_qps if start_qps is not None else 0.0)
         lo_rate, lo_row, hi_rate = None, None, None
-        rate = start_factor * steady
+        rate = start_qps if start_qps is not None else start_factor * steady
         while hi_rate is None:
             row = _probe(rate)
             probes.append(row)
@@ -623,6 +718,12 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
         "boundaries": list(part.boundaries),
         "stage_balance": round(part.balance, 4),
         "placed": place_stages,
+        "replicas": getattr(px, "n_replicas", 1),
+        "replica_mode": replica_mode if replicas > 1 else None,
+        "replica_devices": getattr(px, "replica_devices", None),
+        "replica_rows": (px.replica_rows()
+                         if hasattr(px, "replica_rows") else None),
+        "start_qps": None if start_qps is None else round(start_qps, 3),
         "seed": seed,
         "slo_ms": slo_ms,
         "poisson": poisson,
@@ -685,6 +786,15 @@ def main(argv=None) -> int:
     ap.add_argument("--place-stages", action="store_true",
                     help="pin stage i to jax.devices()[i %% n] "
                          "(transparent on a single device)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through R routed pipeline replicas "
+                         "(ReplicaPool + least-estimated-wait router; "
+                         "implies the pipelined subsystem)")
+    ap.add_argument("--replica-mode", default="pipeline",
+                    choices=("pipeline", "stage-shard"),
+                    help="replica placement: whole pipeline per device, "
+                         "or stages sharded across each replica's "
+                         "contiguous device slice")
     ap.add_argument("--qos", action="store_true",
                     help="serve a mixed-traffic stream through the QoS "
                          "frontend (priority lanes + deadlines) and "
@@ -732,7 +842,9 @@ def main(argv=None) -> int:
                    max_wait_ms=args.max_wait_ms,
                    flush_guard_ms=args.flush_guard_ms,
                    admission_control=not args.no_admission,
-                   place_stages=args.place_stages, output=args.output)
+                   place_stages=args.place_stages,
+                   replicas=args.replicas,
+                   replica_mode=args.replica_mode, output=args.output)
     elif qos:
         serve_qos(args.model, frames=args.frames, batch=args.batch,
                   stages=max(args.stages, 1), bits=args.bits,
@@ -741,13 +853,17 @@ def main(argv=None) -> int:
                   max_wait_ms=args.max_wait_ms,
                   admission_control=not args.no_admission,
                   flush_guard_ms=args.flush_guard_ms,
-                  place_stages=args.place_stages, output=args.output)
-    elif args.stages > 0:
+                  place_stages=args.place_stages,
+                  replicas=args.replicas,
+                  replica_mode=args.replica_mode, output=args.output)
+    elif args.stages > 0 or args.replicas > 1:
         serve_async(args.model, frames=args.frames, batch=args.batch,
-                    stages=args.stages, bits=args.bits, route=args.route,
-                    max_wait_ms=args.max_wait_ms,
+                    stages=max(args.stages, 1), bits=args.bits,
+                    route=args.route, max_wait_ms=args.max_wait_ms,
                     arrival_fps=args.arrival_fps, output=args.output,
-                    place_stages=args.place_stages, seed=args.seed)
+                    place_stages=args.place_stages,
+                    replicas=args.replicas,
+                    replica_mode=args.replica_mode, seed=args.seed)
     else:
         serve(args.model, frames=args.frames, batch=args.batch,
               bits=args.bits, route=args.route, seed=args.seed,

@@ -24,6 +24,8 @@ from repro.serving.frontend import (AsyncFrontend, ClassStats,
 from repro.serving.partition import (StagePartition, partition_program,
                                      stage_devices, step_cycles)
 from repro.serving.pipeline_executor import PipelineExecutor
+from repro.serving.replica_pool import ReplicaPool
+from repro.serving.router import LeastWaitRouter
 from repro.serving.traffic import (Arrival, TrafficClass,
                                    armed_class_names, default_mix,
                                    make_schedule, parse_traffic_mix,
@@ -35,7 +37,9 @@ __all__ = [
     "ClassStats",
     "DeadlineExpired",
     "FrontendStats",
+    "LeastWaitRouter",
     "PipelineExecutor",
+    "ReplicaPool",
     "RequestRejected",
     "ServedRequest",
     "ServiceTimeEstimator",

@@ -89,6 +89,24 @@ class ServiceTimeEstimator:
                 self._shapes[shape] = _ShapeEstimate(float(seconds),
                                                      warm=True)
 
+    def warm_start_channels(self, shape, window_s: float, *,
+                            stages: int = 1, replicas: int = 1) -> None:
+        """Seed *both* admission channels for ``shape`` from one K>1
+        calibration throughput measurement: the busy-completion-window
+        channel at the measured fleet batch window
+        (``batch / steady_fps``) and the latency channel at
+        ``stages * replicas * window`` — one micro-batch's traversal of
+        a K-stage pipeline is K windows at steady state, and routing
+        over R replicas multiplies the per-batch beat each replica
+        sustains by R. Admission can price a deadline before any two
+        completions have ever overlapped. Measurements outrank this
+        (same rule as :meth:`warm_start`)."""
+        if stages < 1 or replicas < 1:
+            raise ValueError(
+                f"stages={stages}, replicas={replicas} must be >= 1")
+        self.warm_start(window_key(shape), window_s)
+        self.warm_start(shape, stages * replicas * window_s)
+
     def observe(self, shape, seconds: float) -> None:
         """Fold one measured batch service time into ``shape``'s EWMA.
         Non-positive samples (clock skew) are dropped rather than

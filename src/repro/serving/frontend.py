@@ -56,6 +56,7 @@ The executor can be a :class:`~repro.serving.pipeline_executor
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import math
 import queue
@@ -276,7 +277,12 @@ class ClassStats:
 @dataclasses.dataclass
 class FrontendStats:
     """Per-request accounting over one frontend lifetime, totals plus a
-    per-traffic-class breakdown (``classes``)."""
+    per-traffic-class breakdown (``classes``) and — when the executor is
+    a :class:`~repro.serving.replica_pool.ReplicaPool` — a per-replica
+    outcome breakdown (``replicas``, filled at :meth:`AsyncFrontend
+    .close` as the delta of the pool's lifetime counters over this
+    frontend's window, so fleet totals reconcile exactly with the sum of
+    the per-replica rows)."""
 
     submitted: int = 0
     completed: int = 0
@@ -290,6 +296,7 @@ class FrontendStats:
     flushes_deadline: int = 0    # batches expedited by a member deadline
     latencies_s: list = dataclasses.field(default_factory=list)
     classes: dict = dataclasses.field(default_factory=dict)
+    replicas: dict = dataclasses.field(default_factory=dict)
     _t_first: float | None = None
     _t_last: float | None = None
 
@@ -395,6 +402,12 @@ class AsyncFrontend:
         # must not stop the collector thread from recording completions.
         self._lane_cv = threading.Condition()
         self._lanes: dict[int, collections.deque] = {}
+        # Replica-pool executors expose exact per-replica outcome
+        # counters; baseline them here so close() can report the delta
+        # scoped to this frontend's lifetime (the pool's counters span
+        # warmup and earlier frontends).
+        counts = getattr(executor, "replica_counts", None)
+        self._replica_base = counts() if counts is not None else None
         executor.on_result = self._on_result
         if hasattr(executor, "on_error"):
             # Pipelined executors report stage failures asynchronously;
@@ -588,6 +601,17 @@ class AsyncFrontend:
             "estimator": self.estimator.snapshot(),
         }
 
+    def stats_snapshot(self) -> FrontendStats:
+        """A consistent deep copy of :attr:`stats`, taken atomically
+        under the stats lock. With a replica pool underneath, N
+        collector threads mutate the live ``stats`` concurrently
+        (counters, latency lists, class dicts); reading it field by
+        field mid-flight can tear — e.g. ``resolved > submitted`` or a
+        latency list longer than ``completed``. Monitoring loops and the
+        stress lane read through this instead."""
+        with self._lock:
+            return copy.deepcopy(self.stats)
+
     def close(self) -> None:
         """Stop accepting requests, flush everything queued, and wait for
         every in-flight request to resolve (completed, failed, expired,
@@ -614,6 +638,15 @@ class AsyncFrontend:
             if time.perf_counter() > deadline:
                 raise TimeoutError("in-flight requests did not complete")
             time.sleep(0.001)
+        # Every request has resolved, so the pool's counters are
+        # quiescent for this frontend's traffic: record the per-replica
+        # outcome delta over our lifetime (exact fleet reconciliation).
+        if self._replica_base is not None:
+            rows = self.executor.replica_counts()
+            with self._lock:
+                self.stats.replicas = {
+                    str(r): {k: rows[r][k] - base[k] for k in base}
+                    for r, base in enumerate(self._replica_base)}
         # Release the executor for a future frontend (it is documented
         # as reusable across drains) and drop the cross-reference.
         self.executor.on_result = None

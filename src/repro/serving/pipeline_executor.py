@@ -68,6 +68,7 @@ class PipelineExecutor:
                  donate: bool | None = None, output: str = "top1",
                  queue_depth: int = DEFAULT_QUEUE_DEPTH,
                  place_stages: bool = False,
+                 devices: Sequence | None = None,
                  on_result: Callable[[object, np.ndarray], None] | None = None,
                  on_error: Callable[[object, BaseException], None] | None = None):
         if output not in ("top1", "logits"):
@@ -89,10 +90,17 @@ class PipelineExecutor:
         # pipelining buys real concurrency on a multi-device backend
         # (stages stop competing for one chip); transparent on a
         # single-device backend, where every stage lands on the same
-        # device and the arithmetic is unchanged.
-        self.stage_devices = (
-            stage_devices(self.partition.n_stages) if place_stages
-            else [None] * self.partition.n_stages)
+        # device and the arithmetic is unchanged. An explicit ``devices``
+        # list round-robins over that list instead — the replica pool
+        # uses it to pin a whole replica to one device (pipeline mode)
+        # or its stages across a mesh slice (stage-shard mode).
+        if devices is not None:
+            self.stage_devices = stage_devices(self.partition.n_stages,
+                                               list(devices))
+        elif place_stages:
+            self.stage_devices = stage_devices(self.partition.n_stages)
+        else:
+            self.stage_devices = [None] * self.partition.n_stages
         self.runners: list[CompiledRunner] = [
             program.compile_stage_runner(b, e, route=route,
                                          interpret=interpret, donate=donate,

@@ -146,7 +146,7 @@ def test_validate_rejects_seeded_knee_regression(tmp_path):
             "measured_steady_fps": 10.0, "modeled_fps_alg1": 100.0,
             "batch": 8, "stages": 2, "seed": 0, "slo_ms": 500.0,
             "miss_target": 0.01, "traffic_mix": [], "route": "f32",
-            "admission_control": True,
+            "admission_control": True, "replicas": 1,
             "knee_qps": 12.0, "knee_of_steady": 1.2,
             "probes": [
                 {"arrival_fps": 12.0, "sustained": True,
@@ -175,6 +175,78 @@ def test_validate_rejects_seeded_knee_regression(tmp_path):
     p.write_text(json.dumps(bad))
     errs = vb.validate(str(p))
     assert any("contradicts miss" in e for e in errs)
+
+
+def _knee_row(replicas, knee_qps):
+    return {
+        "measured_steady_fps": 10.0, "modeled_fps_alg1": 100.0,
+        "batch": 8, "stages": 2, "seed": 0, "slo_ms": 500.0,
+        "miss_target": 0.01, "traffic_mix": [], "route": "f32",
+        "admission_control": True, "replicas": replicas,
+        "knee_qps": knee_qps, "knee_of_steady": knee_qps / 10.0,
+        "probes": [
+            {"arrival_fps": knee_qps, "sustained": True,
+             "armed_miss_rate": 0.0, "armed_submitted": 10,
+             "submitted": 40, "completed": 40, "expired": 0,
+             "rejected": 0, "rejected_wait": 0},
+            {"arrival_fps": 2 * knee_qps, "sustained": False,
+             "armed_miss_rate": 0.5, "armed_submitted": 10,
+             "submitted": 40, "completed": 20, "expired": 0,
+             "rejected": 0, "rejected_wait": 20},
+        ],
+    }
+
+
+def test_validate_knee_scaling_block(tmp_path):
+    """The knee-vs-R sweep block: rows validate recursively, row R must
+    have run with R replicas, and the gated knee_vs_r1 ratios must
+    reproduce from the rows' knee_qps."""
+    top = _knee_row(1, 12.0)
+    top["knee_scaling"] = {
+        "device_count": 4, "mode": "pipeline",
+        "rows": {"1": _knee_row(1, 12.0), "2": _knee_row(2, 18.0)},
+        "knee_vs_r1": {"2": 1.5},
+    }
+    data = {"schema_version": 1, "bench": "serve_knee", "seed": 0,
+            "models": {"alexnet": top}}
+    p = tmp_path / "BENCH_serve_knee.json"
+    p.write_text(json.dumps(data))
+    assert vb.validate(str(p)) == []
+    # Ratio drifting from the rows it summarizes -> schema failure
+    # (the CI gate on knee_vs_r1/2 reads the ratio, so it must be
+    # derivable from the data).
+    bad = json.loads(json.dumps(data))
+    bad["models"]["alexnet"]["knee_scaling"]["knee_vs_r1"]["2"] = 2.5
+    p.write_text(json.dumps(bad))
+    assert any("does not reproduce" in e for e in vb.validate(str(p)))
+    # Row keyed "2" that actually ran one replica -> schema failure.
+    bad = json.loads(json.dumps(data))
+    bad["models"]["alexnet"]["knee_scaling"]["rows"]["2"]["replicas"] = 1
+    p.write_text(json.dumps(bad))
+    assert any("does not match key" in e for e in vb.validate(str(p)))
+    # Sweep without its R=1 baseline -> schema failure.
+    bad = json.loads(json.dumps(data))
+    del bad["models"]["alexnet"]["knee_scaling"]["rows"]["1"]
+    p.write_text(json.dumps(bad))
+    assert any("R=1 baseline" in e for e in vb.validate(str(p)))
+    # A row whose sweep found no knee carries a null ratio: legal for
+    # the schema (the CI gate on that path still fails, by design)...
+    nul = json.loads(json.dumps(data))
+    ks = nul["models"]["alexnet"]["knee_scaling"]
+    ks["rows"]["2"]["knee_qps"] = None
+    ks["rows"]["2"]["knee_of_steady"] = None
+    for probe in ks["rows"]["2"]["probes"]:
+        probe["sustained"] = False
+        probe["armed_miss_rate"] = 0.5
+    ks["knee_vs_r1"]["2"] = None
+    p.write_text(json.dumps(nul))
+    assert vb.validate(str(p)) == []
+    # ...but a null ratio with both knees present is a schema failure.
+    bad = json.loads(json.dumps(data))
+    bad["models"]["alexnet"]["knee_scaling"]["knee_vs_r1"]["2"] = None
+    p.write_text(json.dumps(bad))
+    assert any("null but both knees exist" in e
+               for e in vb.validate(str(p)))
 
 
 @pytest.mark.parametrize("band,value,ok", [

@@ -7,7 +7,36 @@ import threading
 
 import pytest
 
-from repro.serving import ServiceTimeEstimator
+from repro.serving import ServiceTimeEstimator, window_key
+
+
+def test_warm_start_channels_seeds_both_admission_channels():
+    """One K>1 calibration throughput measurement seeds both channels:
+    the busy-completion-window at the fleet batch window and the latency
+    at stages x replicas x window — and real measurements still outrank
+    the seed, channel by channel."""
+    est = ServiceTimeEstimator()
+    est.warm_start_channels(32, 0.040, stages=3, replicas=2)
+    assert est.estimate(window_key(32)) == pytest.approx(0.040)
+    assert est.estimate(32) == pytest.approx(3 * 2 * 0.040)
+    # A measured latency outranks a later warm start on that channel
+    # only; the never-observed window channel still accepts the seed.
+    est.observe(32, 0.100)
+    lat_after_obs = est.estimate(32)
+    est.warm_start_channels(32, 0.010, stages=3, replicas=2)
+    assert est.estimate(window_key(32)) == pytest.approx(0.010)
+    assert est.estimate(32) == pytest.approx(lat_after_obs)
+    # Degenerate K=1, R=1: both channels seed at the same window.
+    est2 = ServiceTimeEstimator()
+    est2.warm_start_channels(8, 0.020)
+    assert est2.estimate(8) == pytest.approx(0.020)
+    assert est2.estimate(window_key(8)) == pytest.approx(0.020)
+    with pytest.raises(ValueError):
+        est.warm_start_channels(32, 0.010, stages=0)
+    with pytest.raises(ValueError):
+        est.warm_start_channels(32, 0.010, replicas=0)
+    with pytest.raises(ValueError):
+        est.warm_start_channels(32, -1.0)
 
 
 def test_empty_estimator_knows_nothing():

@@ -1,0 +1,258 @@
+"""Replicated serving: the least-estimated-wait router (warm pricing,
+seeded cold power-of-two-choices, straggler avoidance) and the
+:class:`ReplicaPool` behind it — routed replicated output must stay
+bit-identical to the single-replica pipeline in both replica modes, and
+per-replica outcome counts must reconcile exactly with fleet totals."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import workload as W
+from repro.core.program import compile_model
+from repro.launch.mesh import device_slices
+from repro.models import cnn
+from repro.serving import LeastWaitRouter, ReplicaPool
+
+
+def _tiny():
+    """Small graph exercising every step kind (same shape as
+    tests/test_serving.py's)."""
+    m = W.CNNModel("tiny", 16, 4, (
+        W.ConvLayer("c1", 4, 8, 3),
+        W.ConvLayer("p1", 8, 8, 2, stride=2, kind="pool"),
+        W.ConvLayer("c2", 8, 8, 3, groups=2),
+        W.ConvLayer("fc", 8 * 8 * 8, 10, 1, kind="fc"),
+    ))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 4))
+    prog = compile_model(m, p, bits=8, calib_batch=calib)
+    frames = np.asarray(jax.random.normal(jax.random.PRNGKey(2),
+                                          (11, 16, 16, 4)), np.float32)
+    return prog, frames
+
+
+class EchoExecutor:
+    """Synchronous fake replica: optional fixed service delay, echoes
+    the valid frames back as the batch output."""
+
+    def __init__(self, batch_size=4, delay_s=0.0):
+        self.batch_size = batch_size
+        self.delay_s = delay_s
+        self.on_result = None
+        self.on_error = None
+        self.batches = 0
+
+    def submit_batch(self, frames, n_valid, tag=None):
+        self.batches += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if self.on_result is not None:
+            self.on_result(tag, np.asarray(frames)[:n_valid].copy())
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+
+def test_router_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        LeastWaitRouter(0, 4)
+    with pytest.raises(ValueError):
+        LeastWaitRouter(2, 4, straggler_factor=1.0)
+
+
+def test_warm_least_wait_picks_the_idle_replica():
+    """Warm pricing: wait(r) = inflight*window + latency. A busy replica
+    prices one queued batch higher than an idle one, so the idle replica
+    wins; symmetric ties break to the lowest index."""
+    router = LeastWaitRouter(2, 4, seed=0)
+    router.warm_start(0.010, 0.020)
+    assert router.estimated_wait_s(0) == pytest.approx(0.020)
+    assert router.pick() == 0          # symmetric tie -> index 0
+    # Replica 0 now holds one in-flight batch: 1*0.010 + 0.020 prices
+    # above idle replica 1's bare latency.
+    assert router.estimated_wait_s(0) == pytest.approx(0.030)
+    assert router.pick() == 1
+    assert router.inflight(0) == router.inflight(1) == 1
+    # Drain replica 1, keep 0 busy: the idle replica wins again.
+    router.on_complete(1, 0.020)
+    assert router.pick() == 1
+    assert router.cold_picks == 0
+
+
+def test_warm_router_prices_out_a_drifting_replica():
+    """A replica whose latency EWMA drifts up loses the argmin without
+    any dedicated straggler machinery."""
+    router = LeastWaitRouter(2, 4, seed=0)
+    router.warm_start(0.010, 0.020)
+    r = router.pick()
+    assert r == 0
+    router.on_complete(0, 0.500)       # 25x the calibrated latency
+    for _ in range(5):
+        r = router.pick()
+        assert r == 1
+        router.on_complete(1, 0.020)
+
+
+def test_cold_power_of_two_choices_is_seeded_deterministic():
+    """No warm start -> every pick is a cold p2c draw from the seeded
+    RNG: two routers with the same seed reproduce the exact sequence."""
+    a = LeastWaitRouter(4, 4, seed=7)
+    b = LeastWaitRouter(4, 4, seed=7)
+    seq_a = [a.pick() for _ in range(10)]
+    seq_b = [b.pick() for _ in range(10)]
+    assert seq_a == seq_b
+    assert a.cold_picks == 10
+    assert sum(a.picks) == 10
+    # p2c keeps depths near-balanced: no replica hoards the draw.
+    assert max(a.picks) <= 2 * (10 // 4 + 1)
+
+
+def test_straggler_flagged_and_excluded_from_cold_draws():
+    """A replica whose latency EWMA exceeds straggler_factor x the fleet
+    median is flagged and sits out cold draws while healthy replicas
+    exist."""
+    router = LeastWaitRouter(4, 4, seed=3)
+    for r, lat in enumerate([0.010, 0.011, 0.012, 1.0]):
+        router.estimators[r].observe(4, lat)
+    assert not router.is_straggler(0)
+    assert router.is_straggler(3)
+    # Window channels were never seeded -> every pick is cold.
+    picks = [router.pick() for _ in range(30)]
+    assert 3 not in picks
+    assert router.straggler_skips > 0
+    snap = router.snapshot()
+    assert snap["replicas"][3]["straggler"] is True
+    assert snap["replicas"][3]["picks"] == 0
+
+
+def test_single_replica_fast_path():
+    router = LeastWaitRouter(1, 4, seed=0)
+    assert [router.pick() for _ in range(5)] == [0] * 5
+    assert router.inflight(0) == 5
+    assert router.cold_picks == 0
+
+
+# ---------------------------------------------------------------------------
+# ReplicaPool over fake executors
+# ---------------------------------------------------------------------------
+
+
+def test_pool_rejects_bad_config():
+    with pytest.raises(ValueError):
+        ReplicaPool(executors=[])
+    with pytest.raises(ValueError):
+        ReplicaPool(None, replicas=2, mode="nope")
+    with pytest.raises(ValueError):
+        ReplicaPool(None, replicas=2)    # no program, no executors
+
+
+def test_pool_routes_and_reconciles_over_fakes():
+    """Submission order survives routing (drain reorders by sequence
+    number) and the per-replica outcome rows reconcile exactly with the
+    fleet totals."""
+    exs = [EchoExecutor(batch_size=4), EchoExecutor(batch_size=4)]
+    pool = ReplicaPool(executors=exs)
+    frames = [np.full((2, 2, 1), i, np.float32) for i in range(10)]
+    out = pool.serve(frames)
+    pool.close()
+    assert len(out) == 10
+    for i, f in enumerate(out):
+        np.testing.assert_array_equal(f, frames[i])
+    counts = pool.replica_counts()
+    assert sum(r["dispatched_batches"] for r in counts) == 3   # 4+4+2
+    assert sum(r["completed_batches"] for r in counts) == 3
+    assert sum(r["completed_frames"] for r in counts) == 10
+    assert sum(r["failed_batches"] for r in counts) == 0
+    assert sum(ex.batches for ex in exs) == 3
+    assert pool.stats.frames == 10
+    assert pool.stats.padded_frames == 2                       # tail 2/4
+    rows = pool.replica_rows()
+    assert [r["replica"] for r in rows] == [0, 1]
+    for r in rows:
+        assert r["picks"] == r["dispatched_batches"]
+        assert r["inflight"] == 0
+
+
+def test_slowed_straggler_replica_gets_measurably_fewer_batches():
+    """A warm-started pool over one fast and one deliberately slow fake:
+    the slow replica's latency EWMA rises on its first picks and the
+    router routes the rest of the stream away from it."""
+    slow = EchoExecutor(batch_size=4, delay_s=0.005)
+    fast = EchoExecutor(batch_size=4, delay_s=0.0)
+    pool = ReplicaPool(executors=[slow, fast], router_seed=0)
+    pool.router.warm_start(0.001, 0.002)
+    batch = np.zeros((4, 2, 2, 1), np.float32)
+    n = 24
+    for _ in range(n):
+        pool.submit_batch(batch, 4)
+    pool.drain()
+    pool.close()
+    counts = pool.replica_counts()
+    assert counts[0]["completed_batches"] + \
+        counts[1]["completed_batches"] == n
+    # Measurably fewer: the slow replica serves at most a quarter of the
+    # stream (deterministically it gets only the first tie-break pick).
+    assert counts[0]["completed_batches"] < counts[1]["completed_batches"]
+    assert counts[0]["completed_batches"] <= n // 4
+
+
+def test_pool_failure_releases_router_slot_and_is_accounted():
+    class FailingExecutor(EchoExecutor):
+        def submit_batch(self, frames, n_valid, tag=None):
+            raise RuntimeError("replica died")
+
+    pool = ReplicaPool(executors=[FailingExecutor(batch_size=4)])
+    with pytest.raises(RuntimeError):
+        pool.submit_batch(np.zeros((4, 2, 2, 1), np.float32), 4)
+    assert pool.router.inflight(0) == 0
+    counts = pool.replica_counts()
+    assert counts[0]["failed_batches"] == 1
+    assert counts[0]["failed_frames"] == 4
+    assert pool.drain() == []          # the failed batch cannot hang drain
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Device-slice co-partitioning
+# ---------------------------------------------------------------------------
+
+
+def test_device_slices_contiguous_cover_and_wrap():
+    devs = list("abcdefgh")
+    sl = device_slices(3, devs)
+    assert [len(s) for s in sl] == [3, 3, 2]
+    assert [d for s in sl for d in s] == devs       # contiguous cover
+    assert device_slices(4, ["x"]) == [["x"]] * 4   # wrap when R >= D
+    with pytest.raises(ValueError):
+        device_slices(0, devs)
+    with pytest.raises(ValueError):
+        device_slices(2, [])
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity (the acceptance bar): routed replicas == single-jit chain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["pipeline", "stage-shard"])
+def test_replicated_pool_bit_identical_both_modes(mode):
+    """Routing only chooses *where* a micro-batch runs: the routed
+    2-replica pool's output equals the single-jit chain bit for bit in
+    both replica modes, tail padding included."""
+    prog, frames = _tiny()
+    want = prog.compile_runner().logits(frames)
+    with ReplicaPool(prog, replicas=2, mode=mode, stages=2, batch_size=4,
+                     output="logits") as pool:
+        got = np.stack(pool.serve(list(frames)))
+    np.testing.assert_array_equal(got, want)
+    assert pool.n_replicas == 2
+    assert len(pool.replica_devices) == 2
+    counts = pool.replica_counts()
+    assert sum(r["completed_batches"] for r in counts) == 3    # 11/4
+    assert sum(r["completed_frames"] for r in counts) == len(frames)
+    assert pool.stats.padded_frames == 1

@@ -14,7 +14,8 @@ import time
 import numpy as np
 import pytest
 
-from repro.serving import AsyncFrontend, ServiceTimeEstimator
+from repro.serving import (AsyncFrontend, ReplicaPool,
+                           ServiceTimeEstimator)
 
 N_PRODUCERS = 8
 N_FRAMES = 64
@@ -190,3 +191,72 @@ def test_multi_producer_mixed_deadlines_reconcile():
             if r.outcome == "completed":
                 np.testing.assert_array_equal(
                     np.asarray(r.result(timeout=1)), _frame(p, i))
+
+
+def test_multi_producer_replica_pool_reconciles_exactly():
+    """8 producers through the frontend over a routed 3-replica pool,
+    with a concurrent ``stats_snapshot()`` reader hammering the stats
+    lock the whole time: no request hangs, every request resolves to its
+    own frame, no snapshot is ever torn (resolved > submitted), and the
+    fleet totals reconcile *exactly* with the per-replica outcome rows —
+    both the pool's lifetime counters and the frontend's close() delta."""
+    exs = [SlowEchoExecutor(batch_size=16, delay_s=0.002)
+           for _ in range(3)]
+    pool = ReplicaPool(executors=exs, router_seed=11)
+    fe = AsyncFrontend(pool, max_wait_ms=20.0, max_queue=1024)
+
+    stop = threading.Event()
+    torn: list[str] = []
+
+    def snapshot_reader():
+        while not stop.is_set():
+            st = fe.stats_snapshot()
+            resolved = (st.completed + st.failed + st.expired
+                        + st.rejected + st.rejected_wait)
+            if resolved > st.submitted:
+                torn.append(f"resolved {resolved} > "
+                            f"submitted {st.submitted}")
+            time.sleep(0.0005)
+
+    reader = threading.Thread(target=snapshot_reader)
+    reader.start()
+    try:
+        reqs = _run_producers(
+            fe, lambda p, i: fe.submit(_frame(p, i), timeout=30))
+        for p in range(N_PRODUCERS):
+            for r in reqs[p]:
+                assert r._event.wait(timeout=60), "request hung"
+        fe.close()
+    finally:
+        stop.set()
+        reader.join(timeout=10)
+    assert not reader.is_alive()
+    assert torn == [], f"torn snapshots: {torn[:3]}"
+
+    total = N_PRODUCERS * N_FRAMES
+    st = fe.stats
+    assert st.submitted == total
+    assert st.completed == total
+    assert st.failed == st.expired == st.rejected == 0
+    assert st.resolved == total
+    for p in range(N_PRODUCERS):
+        for i, r in enumerate(reqs[p]):
+            np.testing.assert_array_equal(
+                np.asarray(r.result(timeout=1)), _frame(p, i))
+
+    # Exact fleet-vs-replica reconciliation, three ways: the pool's
+    # lifetime rows, the frontend's close() delta, and the fakes' own
+    # batch counters all agree.
+    counts = pool.replica_counts()
+    assert sum(r["completed_frames"] for r in counts) == total
+    assert sum(r["dispatched_frames"] for r in counts) == total
+    assert sum(r["failed_batches"] for r in counts) == 0
+    assert sum(r["completed_batches"] for r in counts) == \
+        sum(ex.batches for ex in exs)
+    assert st.replicas, "frontend recorded no per-replica outcomes"
+    assert sorted(st.replicas) == ["0", "1", "2"]
+    for r, row in enumerate(st.replicas.values()):
+        assert row == counts[r]
+    # Routing spread the load: every replica served something.
+    assert all(r["completed_batches"] > 0 for r in counts)
+    pool.close()
