@@ -38,8 +38,9 @@ bench-quick:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --quick --out BENCH_serve_async.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --quick --out BENCH_serve_qos.json
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --quick --arrival poisson --replicas-sweep 1,2,4 --out BENCH_serve_knee.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_multi_bench.py --quick --out BENCH_serve_multi.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
-	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py --baseline benchmarks/baselines BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py --baseline benchmarks/baselines BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json BENCH_serve_multi.json
 
 # Full async serving sweep (all four models, K in {1,2,4}, batch 32).
 .PHONY: bench-async
@@ -58,6 +59,13 @@ bench-qos:
 bench-knee:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --out BENCH_serve_knee.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_knee.json
+
+# Multi-tenant model zoo (all four paper CNNs behind one frontend):
+# aggregate mixed-traffic knee + the tenant-isolation flood headline.
+.PHONY: bench-multi
+bench-multi:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_multi_bench.py --out BENCH_serve_multi.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_multi.json
 
 # Knee-vs-R replication sweep (the PR headline): 4 forced host devices,
 # R in {1,2,4} routed replicas, uniform + poisson arrivals. R>1 brackets

@@ -11,6 +11,9 @@
   serve-knee : bracketing absolute-QPS sweep; the knee (max sustained
               rate with interactive SLO miss < 1%) is the headline
               capacity number -> BENCH_serve_knee.json
+  serve-multi : multi-tenant model zoo behind one frontend (aggregate
+              mixed-traffic knee + tenant-isolation flood)
+              -> BENCH_serve_multi.json
   ablation  : allocator objectives (paper greedy / exact / waterfill)
               + pipeline stage balance on the TPU mesh
   roofline  : three-term roofline per (arch x shape x mesh) cell
@@ -48,8 +51,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("which", nargs="?", default="all",
                     choices=("all", "table1", "serve", "serve-async",
-                             "serve-qos", "serve-knee", "ablation",
-                             "roofline", "kernels"))
+                             "serve-qos", "serve-knee", "serve-multi",
+                             "ablation", "roofline", "kernels"))
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI setting (AlexNet-only, small batch)")
     ap.add_argument("--replicas", type=int, default=1,
@@ -86,6 +89,9 @@ def main(argv=None) -> int:
             replicas_sweep=([int(r) for r in
                              args.replicas_sweep.split(",")]
                             if args.replicas_sweep else None))
+    if only in ("all", "serve-multi"):
+        from benchmarks import serve_multi_bench
+        serve_multi_bench.run(emit, quick=args.quick)
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run_objectives(emit)

@@ -22,10 +22,18 @@ Schemas are selected by the artifact's ``bench`` field:
   knee row per replica count R plus the ``knee_vs_r1`` ratios — each R
   row is validated recursively and the ratios must reproduce from the
   rows' ``knee_qps``, so the CI gate on ``knee_vs_r1/2`` cannot drift
-  from the data behind it.
+  from the data behind it;
+* ``serve_multi`` — the multi-tenant model zoo
+  (``benchmarks/serve_multi_bench.py``): per-tenant calibration rows,
+  the aggregate-knee sweep (every probe carries per-tenant armed miss
+  rates, and ``sustained`` must reproduce from the worst of them), and
+  the gated ``isolation`` block — the worst victim armed miss rate
+  under a one-tenant flood, which must reconcile with the per-victim
+  rows it summarizes.
 
   python benchmarks/validate_bench.py BENCH_serve.json \
-      BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json
+      BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json \
+      BENCH_serve_multi.json
 
 With ``--baseline DIR`` each artifact is additionally compared against
 the committed reference bands in ``DIR`` (``benchmarks/baselines/``):
@@ -81,6 +89,16 @@ REQUIRED_KNEE_PROBE_KEYS = ("arrival_fps", "sustained",
                             "armed_miss_rate", "armed_submitted",
                             "submitted", "completed", "expired",
                             "rejected", "rejected_wait")
+
+REQUIRED_MULTI_MODEL_KEYS = ("steady_fps", "modeled_fps_alg1", "share",
+                             "slo_ms", "knee")
+REQUIRED_MULTI_PROBE_KEYS = ("arrival_fps", "sustained",
+                             "worst_armed_miss_rate", "submitted",
+                             "completed", "per_tenant")
+REQUIRED_MULTI_AGG_KEYS = ("agg_steady_fps", "knee_qps",
+                           "knee_of_agg_steady", "probes")
+REQUIRED_MULTI_ISO_KEYS = ("flood_tenant", "flood_factor",
+                           "victim_armed_miss_rate", "victims")
 
 
 def _positive(row: dict, key: str) -> bool:
@@ -326,6 +344,113 @@ def _validate_knee_model(name: str, row: dict, errors: list[str]) -> None:
                       f"sustained probe ({max(sustained_rates)})")
 
 
+def _validate_multi(data: dict, errors: list[str]) -> None:
+    """The multi-tenant artifact: per-tenant rows, the aggregate-knee
+    sweep (each probe's ``sustained`` and ``worst_armed_miss_rate`` must
+    reproduce from its per-tenant rows), and the isolation block whose
+    gated headline must reconcile with the per-victim rows."""
+    target = data.get("miss_target")
+    if not (isinstance(target, (int, float)) and 0 < target < 1):
+        errors.append(f"miss_target={target!r} not in (0, 1)")
+        target = None
+    models = data.get("models", {})
+    if isinstance(models, dict) and len(models) < 2:
+        errors.append(f"serve_multi needs >= 2 tenants, got "
+                      f"{sorted(models)}")
+    for name, row in models.items():
+        if not isinstance(row, dict):
+            continue                    # typed by the caller already
+        for key in REQUIRED_MULTI_MODEL_KEYS:
+            if key not in row:
+                errors.append(f"models.{name}: missing {key}")
+        for key in ("steady_fps", "modeled_fps_alg1", "slo_ms"):
+            if key in row and not _positive(row, key):
+                errors.append(f"models.{name}.{key}={row.get(key)!r} "
+                              f"not > 0")
+    agg = data.get("aggregate")
+    if not isinstance(agg, dict):
+        errors.append("empty or missing 'aggregate'")
+        return
+    for key in REQUIRED_MULTI_AGG_KEYS:
+        if key not in agg:
+            errors.append(f"aggregate: missing {key}")
+    probes = agg.get("probes")
+    if not isinstance(probes, list) or len(probes) < 2:
+        errors.append(f"aggregate: needs >= 2 probes, got "
+                      f"{len(probes) if isinstance(probes, list) else probes!r}")
+        return
+    sustained_rates = []
+    for i, prow in enumerate(probes):
+        where = f"aggregate.probes[{i}]"
+        if not isinstance(prow, dict):
+            errors.append(f"{where}: row is {type(prow).__name__}, "
+                          f"not object")
+            continue
+        for key in REQUIRED_MULTI_PROBE_KEYS:
+            if key not in prow:
+                errors.append(f"{where}: missing {key}")
+        if not _positive(prow, "arrival_fps"):
+            errors.append(f"{where}.arrival_fps="
+                          f"{prow.get('arrival_fps')!r} not > 0")
+        per_tenant = prow.get("per_tenant")
+        worst = prow.get("worst_armed_miss_rate")
+        if isinstance(per_tenant, dict) and per_tenant:
+            rates = [t.get("armed_miss_rate") for t in per_tenant.values()
+                     if isinstance(t, dict)]
+            if all(isinstance(r, (int, float)) for r in rates) and \
+                    isinstance(worst, (int, float)) and rates and \
+                    abs(worst - max(rates)) > 1e-9:
+                errors.append(f"{where}: worst_armed_miss_rate={worst} "
+                              f"does not reproduce from per_tenant "
+                              f"(max {max(rates)})")
+        if isinstance(worst, (int, float)) and target is not None and \
+                bool(prow.get("sustained")) != (worst < target):
+            errors.append(f"{where}: sustained={prow.get('sustained')!r} "
+                          f"contradicts worst miss {worst} vs target "
+                          f"{target}")
+        if prow.get("sustained") and _positive(prow, "arrival_fps"):
+            sustained_rates.append(prow["arrival_fps"])
+    knee = agg.get("knee_qps")
+    if knee is None:
+        if sustained_rates:
+            errors.append(f"aggregate: knee_qps is null but "
+                          f"{len(sustained_rates)} probes sustained")
+    elif not isinstance(knee, (int, float)) or knee <= 0:
+        errors.append(f"aggregate.knee_qps={knee!r} not > 0")
+    elif sustained_rates and abs(knee - max(sustained_rates)) > 1e-6:
+        errors.append(f"aggregate: knee_qps={knee} is not the max "
+                      f"sustained probe ({max(sustained_rates)})")
+    iso = data.get("isolation")
+    if not isinstance(iso, dict):
+        errors.append("empty or missing 'isolation'")
+        return
+    for key in REQUIRED_MULTI_ISO_KEYS:
+        if key not in iso:
+            errors.append(f"isolation: missing {key}")
+    flood = iso.get("flood_tenant")
+    if isinstance(models, dict) and flood not in models:
+        errors.append(f"isolation.flood_tenant={flood!r} is not a "
+                      f"recorded tenant")
+    victims = iso.get("victims")
+    if not isinstance(victims, dict) or not victims:
+        errors.append("isolation: empty or missing victims")
+        return
+    if isinstance(models, dict) and flood in victims:
+        errors.append("isolation: the flood tenant cannot be its own "
+                      "victim")
+    vrates = [v.get("armed_miss_rate") for v in victims.values()
+              if isinstance(v, dict)]
+    headline = iso.get("victim_armed_miss_rate")
+    if not (isinstance(headline, (int, float)) and 0 <= headline <= 1):
+        errors.append(f"isolation.victim_armed_miss_rate={headline!r} "
+                      f"not in [0, 1]")
+    elif vrates and all(isinstance(r, (int, float)) for r in vrates) and \
+            abs(headline - max(vrates)) > 1e-9:
+        errors.append(f"isolation: victim_armed_miss_rate={headline} "
+                      f"does not reproduce from victims "
+                      f"(max {max(vrates)})")
+
+
 def validate(path: str) -> list[str]:
     errors: list[str] = []
     try:
@@ -340,10 +465,11 @@ def validate(path: str) -> list[str]:
     if data.get("schema_version") != 1:
         errors.append(f"schema_version={data.get('schema_version')!r} != 1")
     bench = data.get("bench", "serve")
-    if bench not in ("serve", "serve_async", "serve_qos", "serve_knee"):
+    if bench not in ("serve", "serve_async", "serve_qos", "serve_knee",
+                     "serve_multi"):
         errors.append(f"unknown bench kind {bench!r}")
         return errors
-    if bench in ("serve_qos", "serve_knee") and \
+    if bench in ("serve_qos", "serve_knee", "serve_multi") and \
             not isinstance(data.get("seed"), int):
         errors.append(f"{bench} artifact must record its schedule seed")
     models = data.get("models")
@@ -361,8 +487,10 @@ def validate(path: str) -> list[str]:
             _validate_qos_model(name, row, errors)
         elif bench == "serve_knee":
             _validate_knee_model(name, row, errors)
-        else:
+        elif bench == "serve_async":
             _validate_async_model(name, row, errors)
+    if bench == "serve_multi":
+        _validate_multi(data, errors)
     return errors
 
 

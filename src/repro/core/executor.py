@@ -130,6 +130,9 @@ class EngineExecutor:
         self.batch_size = int(batch_size)
         self.output = output
         self.on_result = on_result
+        # Protocol slot only: this executor raises synchronously from
+        # submit_batch / flush_inflight, so the callback is never fired.
+        self.on_error: Callable[[object, BaseException], None] | None = None
         self.runner: CompiledRunner = program.compile_runner(
             route=route, interpret=interpret, donate=donate)
         self.stats = ServeStats()
@@ -184,6 +187,22 @@ class EngineExecutor:
         for f in frames:
             self.submit(f)
         return self.drain()
+
+    def reset_stats(self) -> None:
+        """Zero the serve statistics (between drains, not mid-stream:
+        with batches still in flight the window split would be
+        meaningless)."""
+        with self._lock:
+            if self._inflight or self._pending:
+                raise RuntimeError("reset_stats with work in flight")
+            self.stats = ServeStats()
+            self.stats._first_n = self.batch_size
+            self._t0 = None
+
+    def replica_counts(self) -> list | None:
+        """Protocol conformance: a single jitted chain is not a replica
+        fleet."""
+        return None
 
     # -- the overlap core ----------------------------------------------------
 

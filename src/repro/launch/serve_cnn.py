@@ -26,6 +26,12 @@ micro-batch goes to the replica with the least estimated wait, and the
 fleet's knee scales with R on a multi-device backend (force one on CPU
 with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
 
+This module is the CLI only. The serving engine itself — registry,
+server lifecycle, and the ``serve``/``serve_async``/``serve_qos``/
+``serve_knee`` measurement paths — lives in
+:mod:`repro.serving.server`; multi-model (multi-tenant) serving is
+exercised by ``benchmarks/serve_multi_bench.py`` over the same engine.
+
 Examples (CPU):
   PYTHONPATH=src python -m repro.launch.serve_cnn --model alexnet \
       --frames 64 --batch 16
@@ -39,724 +45,15 @@ Examples (CPU):
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
-
-import jax
-import numpy as np
 
 from repro.core import workload as W
-from repro.core.executor import EngineExecutor
-from repro.core.program import compile_model
-from repro.models import cnn
+from repro.serving.server import (compile_for_serving, serve, serve_async,
+                                  serve_knee, serve_qos, synthetic_stream)
 
-
-def compile_for_serving(model_name: str, *, bits: int = 8, seed: int = 0,
-                        theta: int | None = None):
-    """Compile ``model_name`` exactly as the serve paths consume it:
-    seeded params, seeded calibration batch, Table I's budget convention
-    for the bit width (the plan only affects modeled numbers — never the
-    executed arithmetic)."""
-    m = W.CNN_MODELS[model_name]()
-    params = cnn.init_params(m, jax.random.PRNGKey(seed))
-    calib = jax.random.normal(
-        jax.random.PRNGKey(seed + 1), (1, m.input_hw, m.input_hw,
-                                       m.input_ch))
-    # 8-bit double-pumps the 900 DSPs, so modeled_fps_alg1 here equals
-    # the fps8/fps16 column in benchmarks/table1.py.
-    if theta is None:
-        theta = 2 * 900 - len(m.layers) if bits == 8 else 900
-    kwargs = {"theta": theta,
-              "bram_total": None if bits == 8 else 545}
-    return compile_model(m, params, bits=bits, calib_batch=calib, **kwargs)
-
-
-def synthetic_stream(model_name: str, frames: int,
-                     seed: int = 0) -> np.ndarray:
-    """The seeded synthetic frame stream every serve/bench entry point
-    shares (explicit RNG: identical frames run to run)."""
-    m = W.CNN_MODELS[model_name]()
-    rng = np.random.default_rng(seed + 2)
-    return rng.standard_normal(
-        (frames, m.input_hw, m.input_hw, m.input_ch), dtype=np.float32)
-
-
-def serve(model_name: str, *, frames: int = 64, batch: int = 16,
-          bits: int = 8, route: str | None = None, seed: int = 0,
-          theta: int | None = None, eager_frames: int = 0,
-          output: str = "top1", verbose: bool = True) -> dict:
-    """Compile ``model_name``, serve ``frames`` synthetic frames, return a
-    result dict (measured/modeled FPS). ``eager_frames > 0`` also times
-    the eager per-sample reference loop for comparison."""
-    if frames <= batch:
-        raise ValueError(
-            f"frames={frames} <= batch={batch}: the whole stream fits in "
-            f"the first micro-batch, which is charged to compile/warmup, "
-            f"leaving no steady-state window to measure (steady_fps would "
-            f"be 0). Use frames >= 2*batch.")
-    prog = compile_for_serving(model_name, bits=bits, seed=seed, theta=theta)
-    stream = synthetic_stream(model_name, frames, seed)
-
-    ex = EngineExecutor(prog, batch_size=batch, route=route, output=output)
-    outs = ex.serve(stream)
-    st = ex.stats
-
-    # cache_size() counts XLA executables (1 = compiled once, never
-    # recompiled); -1 means the running jax doesn't expose the counter.
-    n_exec = ex.runner.cache_size()
-    result = {
-        "model": model_name,
-        "bits": bits,
-        "route": ex.runner.route,
-        "batch": batch,
-        "frames": st.frames,
-        "batches": st.batches,
-        "padded_frames": st.padded_frames,
-        "compile_plus_first_batch_s": round(st.first_batch_s, 3),
-        "measured_steady_fps": round(st.steady_fps, 3),
-        "modeled_fps_alg1": round(prog.fps(), 3),
-        "executables": n_exec,
-        "recompiles": (n_exec - 1) if n_exec >= 0 else None,
-        "sample_top1": [int(np.asarray(o).reshape(-1).argmax())
-                        if output == "logits" else int(o)
-                        for o in outs[:4]],
-    }
-    if eager_frames > 0:
-        y = prog.run(stream[:1])           # warm the eager op caches
-        jax.block_until_ready(y)
-        t0 = time.perf_counter()
-        for i in range(eager_frames):
-            jax.block_until_ready(prog.run(stream[i:i + 1]))
-        dt = time.perf_counter() - t0
-        result["eager_fps"] = round(eager_frames / dt, 3)
-        result["speedup_vs_eager"] = round(
-            result["measured_steady_fps"] / max(result["eager_fps"], 1e-9), 2)
-    if verbose:
-        hw_fps = result["modeled_fps_alg1"]
-        print(f"[serve_cnn] {model_name} bits={bits} route={result['route']}"
-              f" batch={batch}: measured {result['measured_steady_fps']:.2f}"
-              f" fps (steady), modeled {hw_fps:.1f} fps (Alg. 1 @200MHz)"
-              f" | first batch {st.first_batch_s:.1f}s"
-              f" | recompiles="
-              f"{'?' if result['recompiles'] is None else result['recompiles']}")
-        if "eager_fps" in result:
-            print(f"[serve_cnn]   eager per-sample {result['eager_fps']:.2f}"
-                  f" fps -> {result['speedup_vs_eager']:.1f}x batched")
-    return result
-
-
-def _make_executor(prog, *, stages, batch, route, output, place_stages,
-                   replicas=1, replica_mode="pipeline", seed=0):
-    """One executor for every serve path: the single
-    :class:`PipelineExecutor` when ``replicas <= 1`` (exact PR-5
-    behaviour), otherwise a :class:`ReplicaPool` of R routed replicas
-    over the device mesh (``pipeline``: whole pipeline per device;
-    ``stage-shard``: each replica stage-pipelines across its contiguous
-    device slice). The router RNG is seeded alongside everything else,
-    so cold-start placement replays."""
-    from repro.serving import PipelineExecutor, ReplicaPool
-    if replicas <= 1:
-        return PipelineExecutor(prog, stages=stages, batch_size=batch,
-                                route=route, output=output,
-                                place_stages=place_stages)
-    return ReplicaPool(prog, replicas=replicas, mode=replica_mode,
-                       stages=stages, batch_size=batch, route=route,
-                       output=output, router_seed=seed)
-
-
-def _pipeline_throughput(px, stream, batch):
-    """Warmup + closed-loop steady-state throughput of one pipeline:
-    one micro-batch through all K stages compiles every stage jit (stats
-    reset afterwards so the measured window is pure steady state —
-    without this, batches queued during the cold compiles flood out the
-    moment the pipeline opens and a short stream reads an absurd fps),
-    then a saturating closed-loop pass. Returns (warmup_s, phase-1
-    stats snapshot) — snapshotting keeps the counts describing exactly
-    the window steady_fps was measured over (later frontend phases keep
-    accumulating into ``px.stats``). A replica pool warms every replica
-    (all R x K stage jits), so no probe ever pays a cold compile
-    mid-measurement."""
-    t0 = time.perf_counter()
-    warm = getattr(px, "warmup", None)
-    if warm is not None:
-        warm(list(stream[:batch]))
-    else:
-        px.serve(list(stream[:batch]))
-    warmup_s = time.perf_counter() - t0
-    # One more single-batch pass through the now-compiled, *empty*
-    # pipeline: the unloaded K-stage traversal. This is the honest seed
-    # for the admission latency channel — the closed-loop pass below
-    # runs saturated, so its per-batch dispatch->done times include
-    # stage-queue waits that an admitted open-loop request never sees.
-    t0 = time.perf_counter()
-    px.serve(list(stream[:batch]))
-    lat1_s = time.perf_counter() - t0
-    px.reset_stats()
-    px.serve(list(stream))
-    return warmup_s, lat1_s, dataclasses.replace(px.stats)
-
-
-def _default_max_wait_ms(batch: int, rate: float) -> float:
-    """One full batch assembles in batch/rate seconds; waiting any less
-    flushes padded partial batches faster than the pipeline drains them
-    (service rate collapses), any more only parks the first frame of a
-    quiet period."""
-    return 1e3 * batch / rate if rate > 0 else 50.0
-
-
-def _warmed_frontend(px, steady: float, rate: float, batch: int, *,
-                     max_wait_ms: float | None,
-                     admission_control: bool,
-                     flush_guard_ms: float | None,
-                     lat1_s: float | None = None):
-    """One convention for the per-replay control plane — shared by the
-    QoS rates and the knee probes so their artifacts stay comparable: a
-    fresh estimator per replay (an overload replay's noisy tail must
-    not skew the next replay's admission), warm-started from the
-    measured calibration throughput (:meth:`ServiceTimeEstimator
-    .warm_start_channels`) — the window channel at the fleet batch
-    window (``batch / steady``), the latency channel at
-    ``stages x replicas x window`` (a K-stage traversal is ~K windows,
-    and R-way routing multiplies each replica's per-batch beat by R) —
-    behind a frontend whose ``max_wait`` defaults to one full-batch
-    window at the arrival rate. When the calibration pass measured the
-    *unloaded* single-batch traversal (``lat1_s``), that measurement
-    replaces the formula on the latency channel: the ``K x R x window``
-    bound assumes fleet throughput scales linearly with R, which
-    overprices admission whenever replicas share silicon (the backlog
-    ahead of a request is priced separately, via the window channel, so
-    the latency channel must NOT bake queueing in). With a replica pool
-    underneath, the router's per-replica estimators get the matching
-    per-replica formula seed — router pricing is relative across
-    replicas, so a shared bias cancels — and admission itself stays on
-    the fleet numbers: the frontend's shared estimator observes the
-    interleaved completion beat of all R replicas."""
-    from repro.serving import AsyncFrontend, ServiceTimeEstimator
-    n_replicas = getattr(px, "n_replicas", 1)
-    warm = batch / max(steady, 1e-9)
-    est = ServiceTimeEstimator()
-    est.warm_start_channels(batch, warm, stages=px.partition.n_stages,
-                            replicas=n_replicas)
-    if lat1_s is not None and lat1_s > 0:
-        est.warm_start(batch, lat1_s)
-    router = getattr(px, "router", None)
-    if router is not None:
-        router.warm_start(n_replicas * warm,
-                          px.partition.n_stages * n_replicas * warm)
-    wait_ms = (max_wait_ms if max_wait_ms is not None
-               else _default_max_wait_ms(batch, min(rate, steady)))
-    return AsyncFrontend(px, max_wait_ms=wait_ms, estimator=est,
-                         admission_control=admission_control,
-                         flush_guard_ms=flush_guard_ms)
-
-
-def serve_async(model_name: str, *, frames: int = 64, batch: int = 16,
-                stages: int = 2, bits: int = 8, route: str | None = None,
-                seed: int = 0, theta: int | None = None,
-                max_wait_ms: float | None = None,
-                arrival_fps: float | None = None,
-                place_stages: bool = False,
-                replicas: int = 1, replica_mode: str = "pipeline",
-                output: str = "top1", program=None,
-                verbose: bool = True) -> dict:
-    """Serve ``frames`` synthetic frames through the K-stage pipelined
-    subsystem (``repro.serving``) behind the async request frontend.
-
-    Two measurement phases over one compiled pipeline:
-
-    1. **throughput** — closed-loop stream straight into the
-       :class:`PipelineExecutor` (saturating, no frontend) after a
-       warmup pass, measuring the steady-state FPS the single-jit path's
-       ``measured_steady_fps`` is compared against;
-    2. **latency** — the :class:`AsyncFrontend` replays the stream as an
-       open-loop arrival process at ``arrival_fps`` (default: 70% of the
-       measured throughput, scheduled by the shared seeded generator
-       :func:`repro.serving.traffic.make_schedule`) and records
-       per-request p50/p95/p99. ``max_wait_ms`` defaults to one
-       full-batch assembly window at the arrival rate.
-
-    ``place_stages`` pins stage i to ``jax.devices()[i % n]``
-    (transparent on a single device); ``replicas > 1`` serves through a
-    routed :class:`ReplicaPool` instead. Pass ``program`` to reuse an
-    already-compiled program (the bench sweeps stage counts over one
-    compile).
-    """
-    from repro.serving import (AsyncFrontend, TrafficClass, make_schedule,
-                               replay)
-
-    if frames <= batch:
-        raise ValueError(f"frames={frames} <= batch={batch}: no "
-                         f"steady-state window (use frames >= 2*batch)")
-    prog = program if program is not None else compile_for_serving(
-        model_name, bits=bits, seed=seed, theta=theta)
-    stream = synthetic_stream(model_name, frames, seed)
-
-    px = _make_executor(prog, stages=stages, batch=batch, route=route,
-                        output=output, place_stages=place_stages,
-                        replicas=replicas, replica_mode=replica_mode,
-                        seed=seed)
-    part = px.partition
-    with px:
-        warmup_s, lat1_s, ph1 = _pipeline_throughput(px, stream, batch)
-        steady = ph1.steady_fps
-
-        # Phase 2: open-loop latency at a sustainable arrival rate, one
-        # best-effort class (the QoS path is serve_qos).
-        rate = arrival_fps if arrival_fps is not None else 0.7 * steady
-        if max_wait_ms is None:
-            max_wait_ms = _default_max_wait_ms(batch, rate)
-        fe = AsyncFrontend(px, max_wait_ms=max_wait_ms)
-        schedule = make_schedule(len(stream), rate,
-                                 [TrafficClass("default")], seed=seed)
-        replay(fe, stream, schedule)
-        fe.close()
-
-    lat = fe.stats.latency_percentiles()
-    result = {
-        "model": model_name,
-        "bits": bits,
-        "route": px.route,
-        "batch": batch,
-        "stages": part.n_stages,
-        "boundaries": list(part.boundaries),
-        "stage_cycles": [round(c, 1) for c in part.stage_cycles],
-        "stage_balance": round(part.balance, 4),
-        "placed": place_stages,
-        "replicas": getattr(px, "n_replicas", 1),
-        "replica_mode": replica_mode if replicas > 1 else None,
-        "replica_devices": getattr(px, "replica_devices", None),
-        "replica_rows": (px.replica_rows()
-                         if hasattr(px, "replica_rows") else None),
-        "frames": ph1.frames,
-        "batches": ph1.batches,
-        "padded_frames": ph1.padded_frames,
-        "compile_plus_warmup_s": round(warmup_s, 3),
-        "measured_steady_fps": round(steady, 3),
-        "modeled_fps_alg1": round(prog.fps(), 3),
-        "arrival_fps": round(rate, 3),
-        "client_fps": round(fe.stats.fps, 3),
-        "max_wait_ms": round(max_wait_ms, 3),
-        "flushes_full": fe.stats.flushes_full,
-        "flushes_timeout": fe.stats.flushes_timeout,
-        "latency_ms_p50": round(lat["p50"] * 1e3, 3),
-        "latency_ms_p95": round(lat["p95"] * 1e3, 3),
-        "latency_ms_p99": round(lat["p99"] * 1e3, 3),
-        "latency_ms_mean": round(lat["mean"] * 1e3, 3),
-    }
-    if verbose:
-        print(f"[serve_async] {model_name} K={part.n_stages} "
-              f"batch={batch}: steady {steady:.2f} fps (balance "
-              f"{part.balance:.2f}), arrival {rate:.1f} fps -> p50 "
-              f"{result['latency_ms_p50']:.1f}ms p95 "
-              f"{result['latency_ms_p95']:.1f}ms p99 "
-              f"{result['latency_ms_p99']:.1f}ms | modeled "
-              f"{result['modeled_fps_alg1']:.1f} fps")
-    return result
-
-
-def _class_row(cs) -> dict:
-    """One traffic class's QoS row: outcome counts, SLO rates, and the
-    phase-split latency percentiles (ms)."""
-    pp = cs.phase_percentiles()
-    return {
-        "submitted": cs.submitted,
-        "completed": cs.completed,
-        "expired": cs.expired,
-        "rejected": cs.rejected,
-        "rejected_wait": cs.rejected_wait,
-        "failed": cs.failed,
-        "late": cs.late,
-        "drop_rate": round(cs.drop_rate, 4),
-        "slo_miss_rate": round(cs.slo_miss_rate, 4),
-        "phase_ms": {
-            phase: {p: round(v * 1e3, 3) for p, v in pcts.items()}
-            for phase, pcts in pp.items()},
-    }
-
-
-def serve_qos(model_name: str, *, frames: int = 96, batch: int = 16,
-              stages: int = 2, bits: int = 8, route: str | None = None,
-              seed: int = 0, theta: int | None = None,
-              slo_ms: float | None = None,
-              traffic_mix=None,
-              load_factors: tuple[float, ...] = (0.6, 1.2),
-              arrival_fps: float | None = None,
-              max_wait_ms: float | None = None,
-              place_stages: bool = False,
-              replicas: int = 1, replica_mode: str = "pipeline",
-              poisson: bool = False,
-              admission_control: bool = True,
-              flush_guard_ms: float | None = None,
-              output: str = "top1", program=None,
-              verbose: bool = True) -> dict:
-    """Serve a mixed-traffic stream through the QoS frontend and report
-    per-class phase-split latency, SLO miss rate, and drop rate.
-
-    After the closed-loop throughput phase (shared with
-    :func:`serve_async`), each entry of ``load_factors`` replays the
-    same seeded mixed-class schedule
-    (:func:`repro.serving.traffic.make_schedule`) open-loop at
-    ``factor * measured_steady_fps`` — one rate below saturation and one
-    above shows the QoS machinery working: under overload the priority
-    lanes keep the interactive class inside its deadline while the
-    best-effort class absorbs the queueing, and deadline-armed requests
-    that cannot make it are dropped (``expired``), not served late.
-    ``arrival_fps`` overrides the factor-derived rates with absolute
-    rates ``factor * arrival_fps`` instead.
-
-    ``traffic_mix`` is a sequence of :class:`TrafficClass` (default:
-    25% interactive priority-1 with deadline ``slo_ms``, 75%
-    best-effort batch). A ``slo_ms`` of None is derived from the
-    measured service time — ``(stages + 3)`` batch windows at the
-    steady rate — so the deadline is feasible below saturation on any
-    backend but binds under overload (a fixed wall-clock default would
-    be always-missed for a slow model on CPU and never-missed for a
-    fast one, telling us nothing).
-
-    The frontend's control decisions are adaptive: each rate's replay
-    gets a :class:`~repro.serving.ServiceTimeEstimator` warm-started
-    from the measured calibration pass (one batch window at the steady
-    rate) and kept current by every completed batch, driving the
-    expedited flush; ``admission_control`` (default on) additionally
-    refuses deadline-armed requests whose estimated wait already
-    exceeds their budget (``rejected_wait`` — they fail fast instead of
-    expiring in queue). Set ``admission_control=False`` for the
-    estimator-less PR-4 admission behaviour.
-    """
-    from repro.serving import default_mix, make_schedule, replay
-
-    if frames <= batch:
-        raise ValueError(f"frames={frames} <= batch={batch}: no "
-                         f"steady-state window (use frames >= 2*batch)")
-    prog = program if program is not None else compile_for_serving(
-        model_name, bits=bits, seed=seed, theta=theta)
-    stream = synthetic_stream(model_name, frames, seed)
-
-    px = _make_executor(prog, stages=stages, batch=batch, route=route,
-                        output=output, place_stages=place_stages,
-                        replicas=replicas, replica_mode=replica_mode,
-                        seed=seed)
-    part = px.partition
-    rates: dict[str, dict] = {}
-    with px:
-        warmup_s, lat1_s, ph1 = _pipeline_throughput(px, stream, batch)
-        steady = ph1.steady_fps
-        base = arrival_fps if arrival_fps is not None else steady
-        if slo_ms is None:
-            # A request's best case traverses assembly (~1 window) plus
-            # the K-stage pipeline with its depth-2 queues; ~stages + 3
-            # windows is comfortably feasible below saturation. With R
-            # routed replicas the *fleet* window is ~R x shorter than
-            # one replica's per-batch beat, but a batch still traverses
-            # a single replica — so the traversal term scales by R.
-            slo_ms = round(
-                (part.n_stages * getattr(px, "n_replicas", 1) + 3)
-                * 1e3 * batch / max(steady, 1e-9), 1)
-        mix = tuple(traffic_mix) if traffic_mix is not None \
-            else default_mix(slo_ms)
-
-        warm_start_s = batch / max(steady, 1e-9)
-        for factor in load_factors:
-            rate = factor * base
-            fe = _warmed_frontend(px, steady, rate, batch,
-                                  max_wait_ms=max_wait_ms,
-                                  admission_control=admission_control,
-                                  flush_guard_ms=flush_guard_ms,
-                                  lat1_s=lat1_s)
-            schedule = make_schedule(len(stream), rate, mix, seed=seed,
-                                     poisson=poisson)
-            replay(fe, stream, schedule)
-            fe.close()
-            st = fe.stats
-            rates[f"{factor:g}x"] = {
-                "load_factor": factor,
-                "arrival_fps": round(rate, 3),
-                "client_fps": round(st.fps, 3),
-                "max_wait_ms": round(fe.max_wait_s * 1e3, 3),
-                "submitted": st.submitted,
-                "completed": st.completed,
-                "expired": st.expired,
-                "rejected": st.rejected,
-                "rejected_wait": st.rejected_wait,
-                "failed": st.failed,
-                "batches": st.batches,
-                "flushes_full": st.flushes_full,
-                "flushes_timeout": st.flushes_timeout,
-                "flushes_deadline": st.flushes_deadline,
-                "control": fe.control_config(),
-                "classes": {name: _class_row(cs)
-                            for name, cs in sorted(st.classes.items())},
-                "replica_outcomes": st.replicas or None,
-            }
-            if verbose:
-                parts = []
-                for name, cs in sorted(st.classes.items()):
-                    pq = cs.phase_percentiles()
-                    parts.append(
-                        f"{name}: p95 q/a/c "
-                        f"{pq['queueing']['p95'] * 1e3:.1f}/"
-                        f"{pq['assembly']['p95'] * 1e3:.1f}/"
-                        f"{pq['compute']['p95'] * 1e3:.1f}ms "
-                        f"miss {cs.slo_miss_rate:.0%} "
-                        f"drop {cs.drop_rate:.0%}")
-                print(f"[serve_qos] {model_name} K={part.n_stages} "
-                      f"load {factor:g}x ({rate:.1f} fps): "
-                      + " | ".join(parts))
-
-    return {
-        "model": model_name,
-        "bits": bits,
-        "route": px.route,
-        "batch": batch,
-        "stages": part.n_stages,
-        "boundaries": list(part.boundaries),
-        "stage_balance": round(part.balance, 4),
-        "placed": place_stages,
-        "stage_devices": ([str(d) for d in px.stage_devices]
-                          if place_stages and hasattr(px, "stage_devices")
-                          else None),
-        "replicas": getattr(px, "n_replicas", 1),
-        "replica_mode": replica_mode if replicas > 1 else None,
-        "replica_devices": getattr(px, "replica_devices", None),
-        "replica_rows": (px.replica_rows()
-                         if hasattr(px, "replica_rows") else None),
-        "seed": seed,
-        "slo_ms": slo_ms,
-        "poisson": poisson,
-        "admission_control": admission_control,
-        "flush_guard_ms": flush_guard_ms,
-        "estimator_warm_start_ms": round(1e3 * warm_start_s, 3),
-        "traffic_mix": [c.to_json() for c in mix],
-        "frames": frames,
-        "compile_plus_warmup_s": round(warmup_s, 3),
-        "measured_steady_fps": round(steady, 3),
-        "modeled_fps_alg1": round(prog.fps(), 3),
-        "rates": rates,
-    }
-
-
-def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
-               stages: int = 2, bits: int = 8, route: str | None = None,
-               seed: int = 0, theta: int | None = None,
-               slo_ms: float | None = None,
-               traffic_mix=None,
-               miss_target: float = 0.01,
-               start_factor: float = 0.5,
-               start_qps: float | None = None,
-               max_factor: float = 4.0,
-               refine_iters: int = 3,
-               max_wait_ms: float | None = None,
-               flush_guard_ms: float | None = None,
-               admission_control: bool = True,
-               place_stages: bool = False,
-               replicas: int = 1, replica_mode: str = "pipeline",
-               poisson: bool = False,
-               output: str = "top1", program=None,
-               verbose: bool = True) -> dict:
-    """Bracketing absolute-QPS sweep: find the knee — the maximum
-    sustained arrival rate at which the deadline-armed (interactive)
-    classes keep ``slo_miss_rate < miss_target`` — and record it as the
-    headline capacity number.
-
-    ``serve_qos`` reports behaviour at load factors *relative to* the
-    measured steady fps; the knee is the *absolute* QPS answer to "how
-    much traffic can this deployment take": replay the seeded mix
-    open-loop at ``start_factor * steady`` QPS, double while the armed
-    classes stay under ``miss_target`` (capped at ``max_factor *
-    steady``), halve downward if even the first probe misses, then
-    bisect the sustained/unsustained bracket ``refine_iters`` times.
-    Every probe reuses the same compiled pipeline, the same seeded
-    schedule generator, and a fresh estimator warm-started from the
-    calibration pass, so the sweep is reproducible from the recorded
-    ``(seed, mix, rates)`` alone. A miss at any probe counts every
-    armed-class request that did not complete inside its deadline —
-    expired + refused at admission (``rejected_wait``, or ``rejected``
-    on a full lane) + served late — so failing fast cannot launder the
-    miss rate.
-
-    ``replicas > 1`` sweeps the same knee over a routed
-    :class:`ReplicaPool`; ``start_qps`` opens the bracket at an absolute
-    rate instead of ``start_factor * steady`` — the knee-vs-R scaling
-    sweep starts each R>1 bracket at the R=1 knee, so "replication never
-    loses to one replica" is probed directly.
-    """
-    from repro.serving import (armed_class_names, default_mix,
-                               make_schedule, replay)
-
-    if frames <= batch:
-        raise ValueError(f"frames={frames} <= batch={batch}: no "
-                         f"steady-state window (use frames >= 2*batch)")
-    if not 0.0 < miss_target < 1.0:
-        raise ValueError(f"miss_target={miss_target} not in (0, 1)")
-    prog = program if program is not None else compile_for_serving(
-        model_name, bits=bits, seed=seed, theta=theta)
-    stream = synthetic_stream(model_name, frames, seed)
-
-    px = _make_executor(prog, stages=stages, batch=batch, route=route,
-                        output=output, place_stages=place_stages,
-                        replicas=replicas, replica_mode=replica_mode,
-                        seed=seed)
-    part = px.partition
-    probes: list[dict] = []
-    with px:
-        warmup_s, lat1_s, ph1 = _pipeline_throughput(px, stream, batch)
-        steady = ph1.steady_fps
-        if slo_ms is None:
-            # Same budget convention as serve_qos: traversal is through
-            # ONE replica, so the term scales by R even though the fleet
-            # window (batch / steady) shrinks with R.
-            slo_ms = round(
-                (part.n_stages * getattr(px, "n_replicas", 1) + 3)
-                * 1e3 * batch / max(steady, 1e-9), 1)
-        mix = tuple(traffic_mix) if traffic_mix is not None \
-            else default_mix(slo_ms)
-        armed = armed_class_names(mix)
-        if not armed:
-            raise ValueError("traffic mix has no deadline-armed class — "
-                             "nothing can define 'sustained'")
-        warm_start_s = batch / max(steady, 1e-9)
-
-        def _probe(rate: float) -> dict:
-            fe = _warmed_frontend(px, steady, rate, batch,
-                                  max_wait_ms=max_wait_ms,
-                                  admission_control=admission_control,
-                                  flush_guard_ms=flush_guard_ms,
-                                  lat1_s=lat1_s)
-            schedule = make_schedule(len(stream), rate, mix, seed=seed,
-                                     poisson=poisson)
-            replay(fe, stream, schedule)
-            fe.close()
-            st = fe.stats
-            cls = [st.klass(n) for n in armed if n in st.classes]
-            n_armed = sum(c.submitted for c in cls)
-            n_miss = sum(c.expired + c.rejected + c.rejected_wait + c.late
-                         for c in cls)
-            # The verdict is computed on the rounded rate the artifact
-            # stores, so `sustained` and `armed_miss_rate` can never
-            # contradict each other under the validator's cross-check.
-            miss = round(n_miss / n_armed if n_armed else 0.0, 4)
-            total_s = [s for c in cls for s in c.total_s]
-            # None, not NaN, when no armed request completed — NaN is
-            # not valid JSON and would poison the uploaded artifact.
-            p95_ms = (round(float(np.percentile(np.asarray(total_s), 95))
-                            * 1e3, 3) if total_s else None)
-            row = {
-                "arrival_fps": round(rate, 3),
-                "sustained": bool(miss < miss_target),
-                "armed_miss_rate": miss,
-                "armed_submitted": n_armed,
-                "armed_missed": n_miss,
-                "armed_p95_ms": p95_ms,
-                "client_fps": round(st.fps, 3),
-                "max_wait_ms": round(fe.max_wait_s * 1e3, 3),
-                "submitted": st.submitted,
-                "completed": st.completed,
-                "expired": st.expired,
-                "rejected": st.rejected,
-                "rejected_wait": st.rejected_wait,
-                "failed": st.failed,
-            }
-            if verbose:
-                print(f"[serve_knee] {model_name} probe {rate:8.2f} qps: "
-                      f"armed miss {miss:6.2%} "
-                      f"({'sustained' if row['sustained'] else 'MISS'}) | "
-                      f"expired {st.expired} rejected_wait "
-                      f"{st.rejected_wait} p95 "
-                      + (f"{p95_ms:.1f}ms" if p95_ms is not None else "n/a"))
-            return row
-
-        # Bracket: escalate from start_factor * steady (or the absolute
-        # start_qps) by doubling until the armed miss rate crosses the
-        # target (or the cap), then bisect [highest sustained, lowest
-        # unsustained].
-        cap = max(max_factor * steady,
-                  start_qps if start_qps is not None else 0.0)
-        lo_rate, lo_row, hi_rate = None, None, None
-        rate = start_qps if start_qps is not None else start_factor * steady
-        while hi_rate is None:
-            row = _probe(rate)
-            probes.append(row)
-            if row["sustained"]:
-                lo_rate, lo_row = rate, row
-                if rate >= cap:
-                    break
-                rate = min(2 * rate, cap)
-            else:
-                hi_rate = rate
-        if lo_rate is None:
-            # Even the opening probe missed: descend until sustained or
-            # the sweep floor — a knee of None means this deployment
-            # cannot hold the SLO at any probed rate.
-            floor = 0.05 * steady
-            while lo_rate is None and rate / 2 >= floor:
-                rate = rate / 2
-                row = _probe(rate)
-                probes.append(row)
-                if row["sustained"]:
-                    lo_rate, lo_row = rate, row
-                else:
-                    hi_rate = rate
-        for _ in range(max(0, int(refine_iters))):
-            if lo_rate is None or hi_rate is None:
-                break
-            if hi_rate / lo_rate < 1.05:
-                break
-            mid = (lo_rate + hi_rate) / 2
-            row = _probe(mid)
-            probes.append(row)
-            if row["sustained"]:
-                lo_rate, lo_row = mid, row
-            else:
-                hi_rate = mid
-
-    result = {
-        "model": model_name,
-        "bits": bits,
-        "route": px.route,
-        "batch": batch,
-        "stages": part.n_stages,
-        "boundaries": list(part.boundaries),
-        "stage_balance": round(part.balance, 4),
-        "placed": place_stages,
-        "replicas": getattr(px, "n_replicas", 1),
-        "replica_mode": replica_mode if replicas > 1 else None,
-        "replica_devices": getattr(px, "replica_devices", None),
-        "replica_rows": (px.replica_rows()
-                         if hasattr(px, "replica_rows") else None),
-        "start_qps": None if start_qps is None else round(start_qps, 3),
-        "seed": seed,
-        "slo_ms": slo_ms,
-        "poisson": poisson,
-        "miss_target": miss_target,
-        "admission_control": admission_control,
-        "flush_guard_ms": flush_guard_ms,
-        "estimator_warm_start_ms": round(1e3 * warm_start_s, 3),
-        "traffic_mix": [c.to_json() for c in mix],
-        "frames": frames,
-        "compile_plus_warmup_s": round(warmup_s, 3),
-        "measured_steady_fps": round(steady, 3),
-        "modeled_fps_alg1": round(prog.fps(), 3),
-        "knee_qps": None if lo_rate is None else round(lo_rate, 3),
-        "knee_of_steady": (None if lo_rate is None
-                           else round(lo_rate / max(steady, 1e-9), 4)),
-        "knee_miss_rate": (None if lo_row is None
-                           else lo_row["armed_miss_rate"]),
-        "knee_armed_p95_ms": (None if lo_row is None
-                              else lo_row["armed_p95_ms"]),
-        "bracket_unsustained_qps": (None if hi_rate is None
-                                    else round(hi_rate, 3)),
-        "probes": probes,
-    }
-    if verbose:
-        knee = result["knee_qps"]
-        print(f"[serve_knee] {model_name} K={part.n_stages} batch={batch}: "
-              f"knee "
-              + (f"{knee:.1f} qps ({result['knee_of_steady']:.2f}x steady)"
-                 if knee is not None else "not found")
-              + f" at armed miss < {miss_target:.0%} | steady "
-              f"{steady:.1f} fps | slo {slo_ms:.0f}ms | "
-              f"{len(probes)} probes")
-    return result
+# Historical import surface: the serve paths started life in this
+# module, and the benches/tests import them from here.
+__all__ = ["compile_for_serving", "synthetic_stream", "serve",
+           "serve_async", "serve_qos", "serve_knee", "main"]
 
 
 def main(argv=None) -> int:

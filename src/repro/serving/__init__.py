@@ -8,50 +8,141 @@ its jitted step range with depth-2 bounded queues between stages — the
 activation double-buffer analogue (:mod:`~repro.serving
 .pipeline_executor`), optionally with each stage placed on its own
 device — and a QoS-aware request frontend batches live traffic into the
-pipeline through priority lanes with per-request deadlines,
-backpressure, and per-class phase-split latency accounting
+pipeline through per-``(tenant, priority)`` lanes with per-request
+deadlines, backpressure, weighted round-robin tenant fairness, and
+per-class phase-split latency accounting
 (:mod:`~repro.serving.frontend`). The frontend's control decisions —
 expedited flush and estimated-wait admission — are driven by an online
 per-batch-shape EWMA service-time estimator
 (:mod:`~repro.serving.estimator`). :mod:`~repro.serving.traffic` is the
-one seeded synthetic-traffic generator every serving bench replays.
+one seeded synthetic-traffic generator every serving bench replays, and
+:mod:`~repro.serving.server` hosts a multi-tenant model zoo — a
+:class:`ProgramRegistry` of compiled programs behind one frontend.
+
+Every executor the frontend can drive conforms to the :class:`Executor`
+protocol below — :class:`PipelineExecutor`, :class:`ReplicaPool`, the
+single-jit :class:`~repro.core.executor.EngineExecutor`, and the
+per-tenant :class:`~repro.serving.server.TenantMux` all by construction.
 """
 
-from repro.serving.estimator import ServiceTimeEstimator, window_key
-from repro.serving.frontend import (AsyncFrontend, ClassStats,
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+# The frontend<->executor contract, spelled out. ``AsyncFrontend``
+# refuses (TypeError) any executor that does not conform, replacing the
+# per-call ``hasattr`` probes of earlier revisions: an executor either
+# offers the whole surface or none of it.
+EXECUTOR_MEMBERS = ("batch_size", "program", "on_result", "on_error",
+                    "submit_batch", "flush_inflight", "reset_stats",
+                    "replica_counts")
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """What the :class:`AsyncFrontend` requires of a serving executor.
+
+    ================== =====================================================
+    member             contract
+    ================== =====================================================
+    ``batch_size``     compiled micro-batch size (frames per dispatch)
+    ``program``        the compiled :class:`EngineProgram` behind the
+                       executor, or ``None`` when there is no single one
+                       (fakes, the per-tenant mux) — the frontend uses it
+                       to reject malformed frames at submit
+    ``on_result``      callback slot ``(tag, outputs)``; the frontend
+                       claims it (must be ``None`` at attach) and releases
+                       it at :meth:`AsyncFrontend.close`
+    ``on_error``       callback slot ``(tag, exc)`` for async batch
+                       failures (``None`` acceptable for executors that
+                       raise synchronously from ``submit_batch``)
+    ``submit_batch``   ``(frames, n_valid, tag=None)``: dispatch one
+                       micro-batch; blocks on internal backpressure
+    ``flush_inflight`` collect finished batches now (no-op for executors
+                       whose collector thread runs continuously)
+    ``reset_stats``    zero the executor's serve statistics (between
+                       drains, not mid-stream)
+    ``replica_counts`` exact per-replica outcome counters
+                       (``list[dict]``), or ``None`` for executors that
+                       are not replica pools
+    ================== =====================================================
+    """
+
+    batch_size: int
+    program: object
+    on_result: object
+    on_error: object
+
+    def submit_batch(self, frames: np.ndarray, n_valid: int,
+                     tag: object = None) -> None: ...
+
+    def flush_inflight(self) -> None: ...
+
+    def reset_stats(self) -> None: ...
+
+    def replica_counts(self) -> list | None: ...
+
+
+from repro.serving.estimator import (ServiceTimeEstimator,  # noqa: E402
+                                     window_key)
+from repro.serving.frontend import (DEFAULT_TENANT,  # noqa: E402
+                                    AsyncFrontend, ClassStats,
                                     DeadlineExpired, FrontendStats,
-                                    RequestRejected, ServedRequest)
-from repro.serving.partition import (StagePartition, partition_program,
-                                     stage_devices, step_cycles)
-from repro.serving.pipeline_executor import PipelineExecutor
-from repro.serving.replica_pool import ReplicaPool
-from repro.serving.router import LeastWaitRouter
-from repro.serving.traffic import (Arrival, TrafficClass,
+                                    RequestRejected, ServedRequest,
+                                    tenant_key)
+from repro.serving.partition import (StagePartition,  # noqa: E402
+                                     partition_program, stage_devices,
+                                     step_cycles)
+from repro.serving.pipeline_executor import PipelineExecutor  # noqa: E402
+from repro.serving.replica_pool import ReplicaPool  # noqa: E402
+from repro.serving.router import LeastWaitRouter  # noqa: E402
+from repro.serving.traffic import (Arrival, TrafficClass,  # noqa: E402
                                    armed_class_names, default_mix,
-                                   make_schedule, parse_traffic_mix,
-                                   replay)
+                                   make_schedule, merge_schedules,
+                                   parse_traffic_mix, replay, tag_tenant)
+from repro.serving.calibrate import (default_max_wait_ms,  # noqa: E402
+                                     pipeline_throughput,
+                                     warmed_frontend)
+from repro.serving.server import (ProgramRegistry, Server,  # noqa: E402
+                                  ServerConfig, TenantMux,
+                                  UnknownModelError, build_server)
 
 __all__ = [
     "Arrival",
     "AsyncFrontend",
     "ClassStats",
+    "DEFAULT_TENANT",
     "DeadlineExpired",
+    "EXECUTOR_MEMBERS",
+    "Executor",
     "FrontendStats",
     "LeastWaitRouter",
     "PipelineExecutor",
+    "ProgramRegistry",
     "ReplicaPool",
     "RequestRejected",
     "ServedRequest",
+    "Server",
+    "ServerConfig",
     "ServiceTimeEstimator",
     "StagePartition",
+    "TenantMux",
     "TrafficClass",
+    "UnknownModelError",
     "armed_class_names",
+    "build_server",
+    "default_max_wait_ms",
     "default_mix",
     "make_schedule",
+    "merge_schedules",
     "parse_traffic_mix",
     "partition_program",
+    "pipeline_throughput",
     "replay",
     "stage_devices",
     "step_cycles",
+    "tag_tenant",
+    "tenant_key",
+    "warmed_frontend",
     "window_key",
 ]

@@ -1,26 +1,35 @@
-"""Async request frontend: priority lanes, deadlines, dynamic batcher.
+"""Async request frontend: tenant+priority lanes, deadlines, batcher.
 
 Non-synthetic traffic arrives one frame at a time, at arbitrary rates,
 and not all of it is equal: an interactive frame wants an answer inside
-its deadline, a bulk re-index frame only wants an answer eventually. The
+its deadline, a bulk re-index frame only wants an answer eventually —
+and in a multi-model deployment the frames belong to different
+*tenants* (compiled models) that must not starve each other. The
 engines underneath want fixed-shape micro-batches. The frontend bridges
 the two (the QoS analogue of the FPGA's stream arbitration in front of
 the engine pipeline):
 
 * :meth:`AsyncFrontend.submit` enqueues a request into a *bounded
-  per-priority lane* and returns a :class:`ServedRequest` handle
-  immediately. Requests carry ``(priority, deadline_ms)``; a full lane
-  blocks the caller (backpressure — the same stall a full activation
-  buffer exerts on the paper's producer engine) or raises
-  :class:`queue.Full` when ``timeout`` expires. Per-lane bounds mean a
-  flood in one class cannot exhaust another class's admission capacity.
-* a batcher thread assembles micro-batches dynamically,
-  **highest-priority lane first**: a batch is flushed when it reaches
-  ``batch_size`` frames, when the oldest member has waited
+  per-``(tenant, priority)`` lane* and returns a :class:`ServedRequest`
+  handle immediately. Requests carry ``(tenant, priority,
+  deadline_ms)``; a full lane blocks the caller (backpressure — the
+  same stall a full activation buffer exerts on the paper's producer
+  engine) or raises :class:`queue.Full` when ``timeout`` expires.
+  Per-lane bounds mean a flood in one class — or one tenant — cannot
+  exhaust another's admission capacity.
+* a batcher thread assembles micro-batches dynamically. Across tenants
+  it sweeps *weighted round-robin* (``tenant_shares``, default equal):
+  each time a new batch opens, every tenant with queued work earns
+  credit proportional to its share and the highest-credit tenant wins —
+  so a flooding tenant gets its share of batch slots, never all of
+  them. Within the winning tenant, lanes drain highest-priority first,
+  exactly the single-tenant PR-4 discipline. A batch is *single-tenant*
+  (different models take different frame shapes): it is flushed when it
+  reaches ``batch_size`` frames, when the oldest member has waited
   ``max_wait_ms``, **or** when holding it any longer would push a
   member past its deadline (the expedited flush). The expedited flush
   fires ``est_service + guard`` before the tightest member deadline,
-  where ``est_service`` is an online per-batch-shape EWMA of measured
+  where ``est_service`` is an online per-tenant EWMA of measured
   compute phases (:class:`~repro.serving.estimator
   .ServiceTimeEstimator`, fed from each batch's
   ``t_dispatched -> t_done``); with no estimate yet it falls back to
@@ -33,24 +42,27 @@ the engine pipeline):
   display slot is not worth computing.
 * with ``admission_control=True``, a deadline-armed request whose
   deadline budget is already smaller than the estimated wait for the
-  queued work ahead of it (frames in lanes at its priority or higher
-  plus in-flight micro-batches, priced by the estimator) is refused at
-  submit with the ``rejected_wait`` outcome — hopeless requests fail
-  fast instead of expiring in queue (the analogue of dropping a frame
-  at the input buffer when the display slot it targets is already
-  unreachable).
+  queued work ahead of it (frames in *its own tenant's* lanes at its
+  priority or higher plus its tenant's in-flight micro-batches, priced
+  by that tenant's estimator channels) is refused at submit with the
+  ``rejected_wait`` outcome — hopeless requests fail fast instead of
+  expiring in queue. Pricing only own-tenant work is the admission half
+  of isolation: another tenant's flood never inflates this tenant's
+  estimated wait.
 * every request records four timestamps — ``t_submit`` (enters its
   lane), ``t_batched`` (popped into an assembling batch),
   ``t_dispatched`` (micro-batch handed to the executor), ``t_done``
   (resolved) — so :class:`FrontendStats` can split latency into
-  queueing / assembly / compute percentiles *per traffic class*, not
-  just end to end.
+  queueing / assembly / compute percentiles *per traffic class* (and
+  roll outcomes up *per tenant*), not just end to end.
 
-The executor can be a :class:`~repro.serving.pipeline_executor
-.PipelineExecutor` (K-stage pipeline) or a thread-safe
-:class:`~repro.core.executor.EngineExecutor` (single jit) — anything with
-``batch_size``, ``submit_batch(frames, n_valid, tag)`` and an
-``on_result`` callback slot.
+The executor must conform to the :class:`repro.serving.Executor`
+protocol — :class:`~repro.serving.pipeline_executor.PipelineExecutor`
+(K-stage pipeline), :class:`~repro.serving.replica_pool.ReplicaPool`
+(R routed replicas), the thread-safe single-jit
+:class:`~repro.core.executor.EngineExecutor`, or the per-tenant
+:class:`~repro.serving.server.TenantMux`; non-conforming objects are
+refused with a TypeError naming the missing members.
 """
 
 from __future__ import annotations
@@ -68,6 +80,7 @@ import numpy as np
 from repro.serving.estimator import ServiceTimeEstimator, window_key
 
 DEFAULT_CLASS = "default"
+DEFAULT_TENANT = "default"
 
 # Outcomes a ServedRequest can resolve with.
 PENDING = "pending"
@@ -84,6 +97,14 @@ REJECTED_WAIT = "rejected_wait"  # refused: estimated wait exceeds deadline
 # dispatch a batch whose deadline-armed members are already dead on
 # arrival.
 DEADLINE_GUARD_FRAC = 0.2
+
+
+def tenant_key(tenant: str, shape):
+    """The estimator key for ``shape`` scoped to ``tenant``. The default
+    tenant keeps the bare shape key, so a single-tenant frontend's
+    estimator channels (and everything warm-starting them) are bit-for-
+    bit the pre-multi-tenant ones."""
+    return shape if tenant == DEFAULT_TENANT else (tenant, shape)
 
 
 class DeadlineExpired(RuntimeError):
@@ -106,13 +127,14 @@ class ServedRequest:
     through lane, batcher, and executor; ``phase_s()`` returns the
     split."""
 
-    __slots__ = ("priority", "deadline_s", "klass",
+    __slots__ = ("priority", "deadline_s", "klass", "tenant",
                  "t_submit", "t_batched", "t_dispatched", "t_done",
                  "_value", "_error", "_outcome", "_event")
 
     def __init__(self, priority: int = 0, deadline_ms: float | None = None,
-                 klass: str | None = None):
+                 klass: str | None = None, tenant: str = DEFAULT_TENANT):
         self.priority = int(priority)
+        self.tenant = str(tenant)
         self.klass = klass if klass is not None else (
             DEFAULT_CLASS if priority == 0 and deadline_ms is None
             else f"p{priority}")
@@ -225,7 +247,9 @@ def _percentiles(samples: list) -> dict[str, float]:
 @dataclasses.dataclass
 class ClassStats:
     """Per-traffic-class accounting: outcome counts and the phase-split
-    latency samples of completed requests."""
+    latency samples of completed requests. Reused per *tenant* for the
+    ``FrontendStats.tenants`` rollup (a tenant is just a coarser
+    grouping over the same outcomes)."""
 
     submitted: int = 0
     completed: int = 0
@@ -276,9 +300,12 @@ class ClassStats:
 
 @dataclasses.dataclass
 class FrontendStats:
-    """Per-request accounting over one frontend lifetime, totals plus a
-    per-traffic-class breakdown (``classes``) and — when the executor is
-    a :class:`~repro.serving.replica_pool.ReplicaPool` — a per-replica
+    """Per-request accounting over one frontend lifetime: totals, a
+    per-traffic-class breakdown (``classes``), a per-tenant rollup
+    (``tenants`` — same :class:`ClassStats` shape, keyed by tenant, so a
+    multi-model server reads each model's outcomes without re-deriving
+    them from class names), and — when the executor is a
+    :class:`~repro.serving.replica_pool.ReplicaPool` — a per-replica
     outcome breakdown (``replicas``, filled at :meth:`AsyncFrontend
     .close` as the delta of the pool's lifetime counters over this
     frontend's window, so fleet totals reconcile exactly with the sum of
@@ -296,6 +323,7 @@ class FrontendStats:
     flushes_deadline: int = 0    # batches expedited by a member deadline
     latencies_s: list = dataclasses.field(default_factory=list)
     classes: dict = dataclasses.field(default_factory=dict)
+    tenants: dict = dataclasses.field(default_factory=dict)
     replicas: dict = dataclasses.field(default_factory=dict)
     _t_first: float | None = None
     _t_last: float | None = None
@@ -312,6 +340,12 @@ class FrontendStats:
         if cs is None:
             cs = self.classes[name] = ClassStats()
         return cs
+
+    def tenant_row(self, name: str) -> ClassStats:
+        ts = self.tenants.get(name)
+        if ts is None:
+            ts = self.tenants[name] = ClassStats()
+        return ts
 
     def latency_percentiles(self) -> dict[str, float]:
         """{'p50','p95','p99','mean'} end-to-end request latency in
@@ -335,6 +369,19 @@ class FrontendStats:
         return self.completed / dt if dt > 0 else 0.0
 
 
+def _require_executor(executor) -> None:
+    """Protocol gate: refuse any executor that does not offer the whole
+    :class:`repro.serving.Executor` surface, naming what is missing.
+    (Imported lazily — the package __init__ imports this module.)"""
+    from repro.serving import EXECUTOR_MEMBERS, Executor
+    if isinstance(executor, Executor):
+        return
+    missing = sorted(m for m in EXECUTOR_MEMBERS if not hasattr(executor, m))
+    raise TypeError(
+        f"{type(executor).__name__} does not conform to the "
+        f"repro.serving.Executor protocol (missing: {', '.join(missing)})")
+
+
 class AsyncFrontend:
     """Dynamic-batching QoS frontend over a serving executor.
 
@@ -345,29 +392,37 @@ class AsyncFrontend:
     ...     out = hi.result()
     ...     fe.close()
 
-    ``priority`` orders lanes (higher drains first); ``deadline_ms``
-    arms drop-on-SLO-miss and the expedited flush. Both default to the
-    PR-3 behaviour: one best-effort FIFO class.
+    ``priority`` orders lanes within a tenant (higher drains first);
+    ``deadline_ms`` arms drop-on-SLO-miss and the expedited flush;
+    ``tenant`` names the model a request belongs to in a multi-model
+    deployment. All default to the PR-3 behaviour: one best-effort FIFO
+    class of one tenant.
 
     ``estimator`` is the shared :class:`ServiceTimeEstimator` driving
-    the expedited flush (and admission); one is created per frontend if
-    not given, self-warming from observed batches. The serve paths warm
-    it from the calibration pass (``batch / measured_steady_fps``).
-    ``admission_control=True`` enables estimated-wait admission:
-    a deadline-armed request is refused (``rejected_wait``) when the
-    estimator prices the queued work ahead of it past its deadline
-    budget. ``flush_guard_ms`` is the safety margin the expedited flush
-    (and admission) keeps against the estimate; ``None`` adapts it to
-    25% of the estimate + 2 ms. Deadline-less requests are untouched by
-    all three knobs — the PR-3/PR-4 best-effort path is unchanged.
+    the expedited flush (and admission), with channels keyed per tenant
+    (:func:`tenant_key` — the default tenant keeps the bare keys); one
+    is created per frontend if not given, self-warming from observed
+    batches. The serve paths warm it from the calibration pass
+    (``batch / measured_steady_fps``). ``admission_control=True``
+    enables estimated-wait admission: a deadline-armed request is
+    refused (``rejected_wait``) when the estimator prices the queued
+    work ahead of it — own-tenant work only — past its deadline budget.
+    ``flush_guard_ms`` is the safety margin the expedited flush (and
+    admission) keeps against the estimate; ``None`` adapts it to 25% of
+    the estimate + 2 ms. ``tenant_shares`` weights the round-robin
+    batcher sweep across tenants (default: equal shares; tenants absent
+    from the mapping get 1.0). Deadline-less requests are untouched by
+    the estimator knobs — the PR-3/PR-4 best-effort path is unchanged.
     """
 
     def __init__(self, executor, *, max_wait_ms: float = 5.0,
                  max_queue: int = 256,
                  estimator: ServiceTimeEstimator | None = None,
                  admission_control: bool = False,
-                 flush_guard_ms: float | None = None):
-        if getattr(executor, "on_result", None) is not None:
+                 flush_guard_ms: float | None = None,
+                 tenant_shares: dict[str, float] | None = None):
+        _require_executor(executor)
+        if executor.on_result is not None:
             raise ValueError("executor already has an on_result consumer")
         self.executor = executor
         self.batch_size = int(executor.batch_size)
@@ -378,57 +433,74 @@ class AsyncFrontend:
         self.admission_control = bool(admission_control)
         self.flush_guard_s = (None if flush_guard_ms is None
                               else float(flush_guard_ms) / 1e3)
+        # Weighted round-robin state for the cross-tenant batcher sweep
+        # (guarded by _lane_cv, like the lanes it arbitrates).
+        self.tenant_shares = dict(tenant_shares or {})
+        self._credit: dict[str, float] = {}
         # Micro-batches dispatched but not yet resolved, and frames the
         # batcher has popped into its currently-assembling batch (both
         # guarded by _lock); work in either place is ahead of a new
         # request but visible in neither the lanes nor the executor, so
-        # admission must price it explicitly.
+        # admission must price it explicitly. Tracked per tenant: a
+        # request only waits behind its own tenant's work (cross-tenant
+        # capacity is governed by the round-robin shares, not priced
+        # into admission).
         self._inflight_batches = 0
+        self._inflight: dict[str, int] = {}
         self._assembling = 0
-        # Second estimator channel: the *completion window* (gap between
-        # consecutive batch completions while another batch was still in
-        # flight) — the executor's throughput beat, which is what a
-        # backlog drains at. Distinct from the latency key because a
-        # K-stage pipeline's traversal latency is ~K windows.
+        self._assembling_tenant: str | None = None
+        # Second estimator channel per tenant: the *completion window*
+        # (gap between consecutive batch completions while another of
+        # the tenant's batches was still in flight) — the executor's
+        # throughput beat, which is what a backlog drains at. Distinct
+        # from the latency key because a K-stage pipeline's traversal
+        # latency is ~K windows.
         self._window_key = window_key(self.batch_size)
-        self._last_done: float | None = None
+        self._last_done: dict[str, float | None] = {}
         self.stats = FrontendStats()
         self._closing = threading.Event()
         self._lock = threading.Lock()
-        # Lane state: priority -> FIFO deque of (req, frame). _lane_cv
-        # guards lanes + per-lane counts; submit() waits on it when its
-        # lane is full (backpressure), the batcher waits on it for work.
-        # Separate from _lock (stats): a producer blocked on a full lane
-        # must not stop the collector thread from recording completions.
+        # Lane state: (tenant, priority) -> FIFO deque of (req, frame).
+        # _lane_cv guards lanes + per-lane counts; submit() waits on it
+        # when its lane is full (backpressure), the batcher waits on it
+        # for work. Separate from _lock (stats): a producer blocked on a
+        # full lane must not stop the collector thread from recording
+        # completions.
         self._lane_cv = threading.Condition()
-        self._lanes: dict[int, collections.deque] = {}
+        self._lanes: dict[tuple[str, int], collections.deque] = {}
         # Replica-pool executors expose exact per-replica outcome
         # counters; baseline them here so close() can report the delta
         # scoped to this frontend's lifetime (the pool's counters span
         # warmup and earlier frontends).
-        counts = getattr(executor, "replica_counts", None)
-        self._replica_base = counts() if counts is not None else None
+        self._replica_base = executor.replica_counts()
         executor.on_result = self._on_result
-        if hasattr(executor, "on_error"):
-            # Pipelined executors report stage failures asynchronously;
-            # the single-jit executor raises from submit_batch instead
-            # (handled in _dispatch).
-            executor.on_error = self._on_error
+        # Pipelined executors report stage failures asynchronously; the
+        # single-jit executor raises from submit_batch instead (handled
+        # in _dispatch) and simply never calls the slot.
+        executor.on_error = self._on_error
         self._batcher = threading.Thread(target=self._run,
                                          name="frontend-batcher", daemon=True)
         self._batcher.start()
+
+    def _lat_key(self, tenant: str):
+        return tenant_key(tenant, self.batch_size)
+
+    def _win_key(self, tenant: str):
+        return window_key(tenant_key(tenant, self.batch_size))
 
     # -- client side ---------------------------------------------------------
 
     def submit(self, frame: np.ndarray, *, priority: int = 0,
                deadline_ms: float | None = None, klass: str | None = None,
+               tenant: str = DEFAULT_TENANT,
                timeout: float | None = None,
                block: bool = True) -> ServedRequest:
-        """Enqueue one float frame ``[H, W, C]`` into the ``priority``
-        lane. ``deadline_ms`` (from now) arms drop-on-SLO-miss;
-        ``klass`` labels the request's traffic class for the stats
-        breakdown (default: 'default' for plain requests, 'p<priority>'
-        otherwise).
+        """Enqueue one float frame ``[H, W, C]`` into the ``(tenant,
+        priority)`` lane. ``deadline_ms`` (from now) arms
+        drop-on-SLO-miss; ``klass`` labels the request's traffic class
+        for the stats breakdown (default: 'default' for plain requests,
+        'p<priority>' otherwise); ``tenant`` routes it to the named
+        model behind a multi-tenant executor.
 
         Blocks while the lane is full (backpressure); raises
         ``queue.Full`` when ``timeout`` (seconds) expires first. With
@@ -442,7 +514,9 @@ class AsyncFrontend:
         req_frame = np.asarray(frame)
         # Reject malformed frames at the client, not inside the batcher
         # thread where one bad frame would poison a whole micro-batch.
-        prog = getattr(self.executor, "program", None)
+        # (program is None behind a multi-tenant mux — the Server
+        # validates against the tenant's own program before submitting.)
+        prog = self.executor.program
         if prog is not None:
             hw = prog.model.input_hw
             want = (hw, hw, prog.model.input_ch)
@@ -450,7 +524,7 @@ class AsyncFrontend:
                 raise ValueError(f"frame shape {req_frame.shape} does not "
                                  f"match the compiled program {want}")
         req = ServedRequest(priority=priority, deadline_ms=deadline_ms,
-                            klass=klass)
+                            klass=klass, tenant=tenant)
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
         with self._lane_cv:
@@ -464,9 +538,10 @@ class AsyncFrontend:
             if self._hopeless(req):
                 self._reject_wait(req)
                 return req
-            lane = self._lanes.get(req.priority)
+            key = (req.tenant, req.priority)
+            lane = self._lanes.get(key)
             if lane is None:
-                lane = self._lanes[req.priority] = collections.deque()
+                lane = self._lanes[key] = collections.deque()
             wait_blocked = False
             while len(lane) >= self.max_queue:
                 if not block:
@@ -475,6 +550,7 @@ class AsyncFrontend:
                     with self._lock:
                         self.stats.rejected += 1
                         self.stats.klass(req.klass).rejected += 1
+                        self.stats.tenant_row(req.tenant).rejected += 1
                     return req
                 remaining = (None if deadline is None
                              else deadline - time.perf_counter())
@@ -502,8 +578,11 @@ class AsyncFrontend:
             self.stats.submitted += 1
             cs = self.stats.klass(req.klass)
             cs.submitted += 1
+            ts = self.stats.tenant_row(req.tenant)
+            ts.submitted += 1
             if req.deadline_s is not None:
                 cs.armed = True
+                ts.armed = True
             if self.stats._t_first is None:
                 self.stats._t_first = req.t_submit
 
@@ -521,45 +600,52 @@ class AsyncFrontend:
     def _urgent_at(self, req: ServedRequest) -> float:
         """The instant the batcher must flush a batch holding ``req``
         (inf for best-effort requests): ``est_service + guard`` before
-        the deadline once the estimator has a measurement, else the
-        static fallback of 80% of the deadline budget spent."""
+        the deadline once the estimator has a measurement for the
+        request's tenant, else the static fallback of 80% of the
+        deadline budget spent."""
         if req.deadline_s is None:
             return float("inf")
-        est = self.estimator.estimate(self.batch_size)
+        est = self.estimator.estimate(self._lat_key(req.tenant))
         if est is None:
             return req.deadline_s - DEADLINE_GUARD_FRAC * (req.deadline_s
                                                            - req.t_submit)
         return req.deadline_s - (est + self._guard_s(est))
 
-    def estimated_wait_s(self, priority: int) -> float | None:
+    def estimated_wait_s(self, priority: int,
+                         tenant: str = DEFAULT_TENANT) -> float | None:
         """Estimated completion time (seconds from now) of a request
-        entering the ``priority`` lane now:
-        ``(backlog_batches - 1) * est_window + est_latency``. The work
-        ahead — in-flight micro-batches plus the batches the queued
-        frames at this priority or higher will form — drains one per
-        *completion window* (EWMA of busy inter-completion gaps; a
-        pipelined executor overlaps in-flight batches, so pricing them
-        serially at full latency would refuse servable requests), then
-        the request's own batch traverses the pipeline in
-        ``est_latency`` (EWMA of measured dispatch->done phases). For a
-        serial executor window == latency and this reduces to pricing
-        every batch at full service time; until a window gap has been
-        observed the latency estimate stands in for the window.
-        ``None`` until the estimator knows nothing at all. Caller holds
+        entering the ``(tenant, priority)`` lane now:
+        ``(backlog_batches - 1) * est_window + est_latency`` over the
+        tenant's *own* work — frames in its lanes at this priority or
+        higher, its assembling batch, its in-flight micro-batches. The
+        backlog drains one batch per *completion window* (EWMA of busy
+        inter-completion gaps; a pipelined executor overlaps in-flight
+        batches, so pricing them serially at full latency would refuse
+        servable requests), then the request's own batch traverses the
+        pipeline in ``est_latency`` (EWMA of measured dispatch->done
+        phases). For a serial executor window == latency and this
+        reduces to pricing every batch at full service time; until a
+        window gap has been observed the latency estimate stands in for
+        the window. Other tenants' backlogs are deliberately not priced:
+        the round-robin sweep guarantees this tenant its share of batch
+        slots regardless of their floods (any cross-tenant slowdown
+        shows up in this tenant's own observed window instead). ``None``
+        until the estimator knows nothing for the tenant. Caller holds
         ``_lane_cv`` (or accepts a racy read)."""
-        lat = self.estimator.estimate(self.batch_size)
+        lat = self.estimator.estimate(self._lat_key(tenant))
         if lat is None:
             return None
-        win = self.estimator.estimate(self._window_key)
+        win = self.estimator.estimate(self._win_key(tenant))
         if win is None:
             win = lat
-        ahead = sum(len(lane) for prio, lane in self._lanes.items()
-                    if prio >= priority)
+        ahead = sum(len(lane) for (t, prio), lane in self._lanes.items()
+                    if t == tenant and prio >= priority)
         with self._lock:
-            inflight = self._inflight_batches
-            # The currently-assembling batch dispatches ahead of any
-            # lane content regardless of priority.
-            ahead += self._assembling
+            inflight = self._inflight.get(tenant, 0)
+            # The tenant's currently-assembling batch dispatches ahead
+            # of any of its lane content regardless of priority.
+            if self._assembling_tenant == tenant:
+                ahead += self._assembling
         batches = inflight + math.ceil((ahead + 1) / self.batch_size)
         return (batches - 1) * win + lat
 
@@ -569,10 +655,10 @@ class AsyncFrontend:
         deadline budget (caller holds _lane_cv)."""
         if not self.admission_control or req.deadline_s is None:
             return False
-        wait = self.estimated_wait_s(req.priority)
+        wait = self.estimated_wait_s(req.priority, req.tenant)
         if wait is None:
             return False
-        est = self.estimator.estimate(self.batch_size)
+        est = self.estimator.estimate(self._lat_key(req.tenant))
         budget = req.deadline_s - time.perf_counter()
         return wait + self._guard_s(est) > budget
 
@@ -583,10 +669,14 @@ class AsyncFrontend:
         with self._lock:
             self.stats.rejected_wait += 1
             self.stats.klass(req.klass).rejected_wait += 1
+            self.stats.tenant_row(req.tenant).rejected_wait += 1
 
     def control_config(self) -> dict:
         """The adaptive-control knobs as a JSON-ready dict — benches
-        record it so knee and QoS artifacts are comparable across PRs."""
+        record it so knee and QoS artifacts are comparable across PRs.
+        The headline estimates are the default tenant's channels (the
+        single-model case); the full per-tenant channel map is in
+        ``estimator``."""
         est = self.estimator.estimate(self.batch_size)
         win = self.estimator.estimate(self._window_key)
         return {
@@ -598,6 +688,7 @@ class AsyncFrontend:
                                else round(est * 1e3, 3)),
             "est_window_ms": (None if win is None
                               else round(win * 1e3, 3)),
+            "tenant_shares": dict(self.tenant_shares) or None,
             "estimator": self.estimator.snapshot(),
         }
 
@@ -626,10 +717,9 @@ class AsyncFrontend:
         # empty under _lane_cv, and submit() refuses new requests once
         # _closing is set — so nothing can be left queued here. Collect
         # trailing micro-batches (PipelineExecutor's collector runs
-        # continuously, the single-jit EngineExecutor collects on flush).
-        flush = getattr(self.executor, "flush_inflight", None)
-        if flush is not None:
-            flush()
+        # continuously, the single-jit EngineExecutor collects on
+        # flush — both sides of the protocol's flush_inflight contract).
+        self.executor.flush_inflight()
         deadline = time.perf_counter() + 60.0
         while True:
             with self._lock:
@@ -650,8 +740,7 @@ class AsyncFrontend:
         # Release the executor for a future frontend (it is documented
         # as reusable across drains) and drop the cross-reference.
         self.executor.on_result = None
-        if hasattr(self.executor, "on_error"):
-            self.executor.on_error = None
+        self.executor.on_error = None
 
     def __enter__(self) -> "AsyncFrontend":
         return self
@@ -681,27 +770,71 @@ class AsyncFrontend:
             lane.extend(live)
             self._lane_cv.notify_all()   # lane freed admission slots
 
-    def _pop_next(self, timeout: float) -> tuple | None:
-        """Pop the oldest request from the highest-priority non-empty
-        lane (None on timeout). Expired requests anywhere are dropped
-        first — the queueing-phase SLO miss — without consuming a batch
-        slot; the batcher's poll cadence (<= 50 ms between calls) bounds
-        how stale an expiry can go undetected."""
+    def _pick_tenant(self) -> str | None:
+        """Weighted round-robin choice among tenants with queued work
+        (caller holds _lane_cv): every waiting tenant earns credit in
+        proportion to its share of the waiting total, the highest
+        credit wins one batch slot (ties break by name for
+        determinism), and the winner pays one slot back. Over any
+        contended interval each tenant's slot count converges to its
+        share; a lone tenant nets zero credit, so a returning tenant
+        faces no accumulated debt. Credits of idle tenants are dropped —
+        fairness is about the present backlog, not hoarded history."""
+        waiting: set[str] = {t for (t, _p), lane in self._lanes.items()
+                             if lane}
+        if not waiting:
+            return None
+        shares = {t: self.tenant_shares.get(t, 1.0) for t in waiting}
+        total = sum(shares.values())
+        self._credit = {t: c for t, c in self._credit.items()
+                        if t in waiting}
+        for t in waiting:
+            self._credit[t] = self._credit.get(t, 0.0) + shares[t] / total
+        chosen = max(sorted(waiting), key=lambda t: self._credit[t])
+        self._credit[chosen] -= 1.0
+        return chosen
+
+    def _pop_tenant(self, tenant: str, now: float) -> tuple | None:
+        """Pop the oldest live request from ``tenant``'s highest-
+        priority non-empty lane (caller holds _lane_cv); None when the
+        tenant has nothing live."""
+        for key in sorted((k for k in self._lanes if k[0] == tenant),
+                          key=lambda k: k[1], reverse=True):
+            lane = self._lanes[key]
+            while lane:
+                req, frame = lane.popleft()
+                self._lane_cv.notify_all()  # lane freed a slot
+                if (req.deadline_s is not None
+                        and now > req.deadline_s):
+                    self._drop_expired(req)
+                    continue
+                return req, frame
+        return None
+
+    def _pop_next(self, timeout: float,
+                  tenant: str | None = None) -> tuple | None:
+        """Pop the next request for the batcher (None on timeout).
+        Expired requests anywhere are dropped first — the
+        queueing-phase SLO miss — without consuming a batch slot; the
+        batcher's poll cadence (<= 50 ms between calls) bounds how
+        stale an expiry can go undetected. With ``tenant=None`` (a new
+        batch opening) the weighted round-robin sweep picks the tenant;
+        a pinned ``tenant`` (filling a single-tenant batch) pops only
+        that tenant's lanes, highest priority first."""
         deadline = time.perf_counter() + timeout
         with self._lane_cv:
             while True:
                 now = time.perf_counter()
                 self._purge_expired(now)
-                for prio in sorted(self._lanes, reverse=True):
-                    lane = self._lanes[prio]
-                    while lane:
-                        req, frame = lane.popleft()
-                        self._lane_cv.notify_all()  # lane freed a slot
-                        if (req.deadline_s is not None
-                                and now > req.deadline_s):
-                            self._drop_expired(req)
-                            continue
-                        return req, frame
+                pick = tenant if tenant is not None else self._pick_tenant()
+                if pick is not None:
+                    got = self._pop_tenant(pick, now)
+                    if got is not None:
+                        return got
+                    if tenant is None:
+                        # The picked tenant held only now-expired work;
+                        # re-sweep before consuming any of the timeout.
+                        continue
                 remaining = deadline - now
                 if remaining <= 0 or self._closing.is_set():
                     return None
@@ -712,6 +845,7 @@ class AsyncFrontend:
         with self._lock:
             self.stats.expired += 1
             self.stats.klass(req.klass).expired += 1
+            self.stats.tenant_row(req.tenant).expired += 1
             self.stats._t_last = req.t_done
 
     def _run(self) -> None:
@@ -727,20 +861,22 @@ class AsyncFrontend:
                 # Idle: collect finished micro-batches the single-jit
                 # executor is holding (no-op for the pipeline, whose
                 # collector thread is always live).
-                flush = getattr(self.executor, "flush_inflight", None)
-                if flush is not None:
-                    flush()
+                self.executor.flush_inflight()
                 continue
             self._assemble(nxt)
 
     def _assemble(self, first: tuple) -> None:
-        """Grow a micro-batch from ``first`` until batch_size, the
-        max_wait timeout, or — the expedited flush — the tightest member
-        deadline, then dispatch it."""
+        """Grow a single-tenant micro-batch from ``first`` until
+        batch_size, the max_wait timeout, or — the expedited flush —
+        the tightest member deadline, then dispatch it. Fill pops are
+        pinned to the first request's tenant: models take different
+        frame shapes, so a batch can never mix tenants."""
+        tenant = first[0].tenant
         batch = [first]
         first[0].t_batched = time.perf_counter()
         with self._lock:
             self._assembling = 1
+            self._assembling_tenant = tenant
         flush_at = first[0].t_submit + self.max_wait_s
         # Holding the batch into a member's deadline would turn a
         # servable request into a drop; flush with guard margin instead.
@@ -761,7 +897,7 @@ class AsyncFrontend:
             # permanently expired, and flushing ahead of a non-empty
             # lane would collapse a backlogged frontend into padded
             # 1-frame batches (service rate / batch_size).
-            nxt = self._pop_next(timeout=0.0)
+            nxt = self._pop_next(timeout=0.0, tenant=tenant)
             if nxt is not None:
                 take(nxt)
                 continue
@@ -776,7 +912,8 @@ class AsyncFrontend:
                 reason = "timeout"
                 break
             nxt = self._pop_next(
-                timeout=min(flush_at - now, urgent_at - now, 0.05))
+                timeout=min(flush_at - now, urgent_at - now, 0.05),
+                tenant=tenant)
             if nxt is not None:
                 take(nxt)
         self._dispatch(batch, reason)
@@ -798,8 +935,10 @@ class AsyncFrontend:
         if not live:
             with self._lock:
                 self._assembling = 0
+                self._assembling_tenant = None
             return
         reqs = tuple(r for r, _ in live)
+        tenant = reqs[0].tenant
         t_disp = time.perf_counter()
         for r in reqs:
             r.t_dispatched = t_disp
@@ -808,8 +947,10 @@ class AsyncFrontend:
             # admission check must never see this batch in neither
             # counter (it would under-price the work ahead by a batch).
             self._assembling = 0
+            self._assembling_tenant = None
             self.stats.batches += 1
             self._inflight_batches += 1
+            self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
             if len(batch) >= self.batch_size:
                 self.stats.flushes_full += 1
             elif reason == "deadline":
@@ -824,8 +965,11 @@ class AsyncFrontend:
                 r._fail(e)
             with self._lock:
                 self._inflight_batches -= 1
-                self._last_done = None
+                self._inflight[tenant] -= 1
+                self._last_done[tenant] = None
                 self.stats.failed += len(reqs)
+                ts = self.stats.tenant_row(tenant)
+                ts.failed += len(reqs)
                 for r in reqs:
                     self.stats.klass(r.klass).failed += 1
                     self.stats._t_last = r.t_done
@@ -834,47 +978,58 @@ class AsyncFrontend:
 
     def _on_result(self, tag, outputs) -> None:
         now = time.perf_counter()
+        tenant = tag[0].tenant
         # One observation per micro-batch: the measured compute phase
-        # (dispatch -> done) feeds the EWMA driving the next flush and
-        # admission decisions. All of a batch's requests share
-        # t_dispatched.
-        self.estimator.observe(self.batch_size, now - tag[0].t_dispatched)
+        # (dispatch -> done) feeds the tenant's EWMA driving the next
+        # flush and admission decisions. All of a batch's requests share
+        # t_dispatched (and, single-tenant batches, one tenant).
+        self.estimator.observe(self._lat_key(tenant),
+                               now - tag[0].t_dispatched)
         with self._lock:
             self._inflight_batches -= 1
-            # A completion with another batch still in flight measures
-            # the executor's throughput beat (busy inter-completion
+            n_left = self._inflight.get(tenant, 1) - 1
+            self._inflight[tenant] = n_left
+            # A completion with another of the tenant's batches still in
+            # flight measures its throughput beat (busy inter-completion
             # gap); idle gaps say nothing about drain rate and are
-            # skipped — _last_done is cleared whenever the system
+            # skipped — _last_done is cleared whenever the tenant
             # drains, or the first busy completion after an idle spell
             # would observe a "window" spanning the whole idle time.
-            if self._last_done is not None and self._inflight_batches >= 1:
-                self.estimator.observe(self._window_key,
-                                       now - self._last_done)
-            self._last_done = now if self._inflight_batches >= 1 else None
+            last = self._last_done.get(tenant)
+            if last is not None and n_left >= 1:
+                self.estimator.observe(self._win_key(tenant), now - last)
+            self._last_done[tenant] = now if n_left >= 1 else None
+            ts = self.stats.tenant_row(tenant)
             for i, req in enumerate(tag):
                 req._resolve(outputs[i])
                 cs = self.stats.klass(req.klass)
                 self.stats.completed += 1
                 cs.completed += 1
+                ts.completed += 1
                 if req.deadline_s is not None and now > req.deadline_s:
                     cs.late += 1
+                    ts.late += 1
                 self.stats.latencies_s.append(now - req.t_submit)
                 ph = req.phase_s()
                 cs.queueing_s.append(ph["queueing"])
                 cs.assembly_s.append(ph["assembly"])
                 cs.compute_s.append(ph["compute"])
                 cs.total_s.append(now - req.t_submit)
+                ts.total_s.append(now - req.t_submit)
             self.stats._t_last = now
 
     def _on_error(self, tag, exc: BaseException) -> None:
         for req in tag:
             req._fail(exc)
+        tenant = tag[0].tenant
         with self._lock:
             self._inflight_batches -= 1
+            self._inflight[tenant] = self._inflight.get(tenant, 1) - 1
             # A failed batch is not a completion: the next success must
             # not measure a "window" spanning this batch's interval.
-            self._last_done = None
+            self._last_done[tenant] = None
             self.stats.failed += len(tag)
+            self.stats.tenant_row(tenant).failed += len(tag)
             for req in tag:
                 self.stats.klass(req.klass).failed += 1
             self.stats._t_last = time.perf_counter()

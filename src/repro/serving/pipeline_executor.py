@@ -245,6 +245,15 @@ class PipelineExecutor:
             self.stage_busy_s = [0.0] * self.partition.n_stages
             self._t0 = None
 
+    def flush_inflight(self) -> None:
+        """Protocol no-op: the collector thread delivers results
+        continuously, so there is never anything to flush on demand."""
+
+    def replica_counts(self) -> list | None:
+        """Protocol conformance: a single pipeline is not a replica
+        fleet."""
+        return None
+
     # -- drain ---------------------------------------------------------------
 
     def drain(self) -> list[np.ndarray]:

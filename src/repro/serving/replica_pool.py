@@ -295,6 +295,10 @@ class ReplicaPool:
         for rep in self.replicas:
             rep.serve(frames)
 
+    def flush_inflight(self) -> None:
+        """Protocol no-op: every replica's collector thread delivers
+        results continuously."""
+
     def reset_stats(self) -> None:
         """Zero the fleet serve statistics and each replica's (between
         drains, not mid-stream). Per-replica dispatch rows and router

@@ -26,7 +26,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.serving.frontend import AsyncFrontend, ServedRequest
+from repro.serving.frontend import (DEFAULT_TENANT, AsyncFrontend,
+                                    ServedRequest)
 
 # The canonical two-class mix the QoS bench and launcher default to:
 # a latency-sensitive interactive slice over a best-effort bulk floor.
@@ -100,11 +101,34 @@ def parse_traffic_mix(spec: str,
 @dataclasses.dataclass(frozen=True)
 class Arrival:
     """One scheduled request: submit at ``t`` seconds after stream
-    start, frame ``frame_idx`` of the stream, as class ``klass``."""
+    start, frame ``frame_idx`` of the (tenant's) stream, as class
+    ``klass``, addressed to ``tenant`` (the default tenant for the
+    single-model schedules :func:`make_schedule` draws; a multi-tenant
+    bench tags per-tenant schedules with :func:`tag_tenant` and merges
+    them by time)."""
 
     t: float
     frame_idx: int
     klass: TrafficClass
+    tenant: str = DEFAULT_TENANT
+
+
+def tag_tenant(schedule: Sequence[Arrival], tenant: str) -> list[Arrival]:
+    """The same schedule addressed to ``tenant`` — the building block
+    for multi-tenant replays: draw one seeded schedule per tenant (its
+    own rate, mix, and frame indices), tag each, then merge-sort by
+    ``t`` into the single interleaved arrival stream one frontend
+    replays."""
+    return [dataclasses.replace(a, tenant=tenant) for a in schedule]
+
+
+def merge_schedules(*schedules: Sequence[Arrival]) -> list[Arrival]:
+    """Interleave per-tenant schedules into one stream ordered by
+    arrival time (stable: equal offsets keep argument order, so the
+    merge is deterministic)."""
+    merged = [a for s in schedules for a in s]
+    merged.sort(key=lambda a: a.t)
+    return merged
 
 
 def make_schedule(n: int, rate_fps: float,
@@ -137,14 +161,17 @@ def make_schedule(n: int, rate_fps: float,
                     klass=classes[int(which[i])]) for i in range(n)]
 
 
-def replay(frontend: AsyncFrontend, frames: np.ndarray,
+def replay(frontend: AsyncFrontend, frames,
            schedule: Sequence[Arrival], *,
            result_timeout: float = 600.0) -> list[ServedRequest]:
     """Submit ``frames`` through ``frontend`` following ``schedule``
     (open loop: each request goes in at its scheduled offset, late or
-    not), then wait for every request to resolve. Returns the request
-    handles in schedule order. An ``expired`` request is a resolved
-    handle (drop-on-SLO-miss is expected QoS behaviour — read
+    not), then wait for every request to resolve. ``frames`` is one
+    stream array for a single-tenant schedule, or a ``{tenant: stream}``
+    mapping for a merged multi-tenant one (each arrival's ``frame_idx``
+    indexes its own tenant's stream). Returns the request handles in
+    schedule order. An ``expired`` request is a resolved handle
+    (drop-on-SLO-miss is expected QoS behaviour — read
     ``req.outcome``), but a ``failed`` one re-raises its serving error:
     a broken pipeline must fail the bench, not quietly thin out the
     percentile samples."""
@@ -154,9 +181,11 @@ def replay(frontend: AsyncFrontend, frames: np.ndarray,
         delay = (t0 + a.t) - time.perf_counter()
         if delay > 0:
             time.sleep(delay)
+        stream = frames[a.tenant] if isinstance(frames, dict) else frames
         reqs.append(frontend.submit(
-            frames[a.frame_idx], priority=a.klass.priority,
-            deadline_ms=a.klass.deadline_ms, klass=a.klass.name))
+            stream[a.frame_idx], priority=a.klass.priority,
+            deadline_ms=a.klass.deadline_ms, klass=a.klass.name,
+            tenant=a.tenant))
     deadline = time.perf_counter() + result_timeout
     for r in reqs:
         if not r._event.wait(timeout=max(0.0, deadline - time.perf_counter())):

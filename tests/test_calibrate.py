@@ -1,0 +1,129 @@
+"""The shared calibration conventions (``repro.serving.calibrate``):
+the one-batch-window flush timeout, the warmup/unloaded-traversal/
+steady-throughput measurement pass, and the warm-started frontend every
+QoS rate and knee probe opens. These used to be private helpers inside
+the launcher; now they are the contract both the single-model serve
+paths and the multi-tenant server build on, so they get pinned here."""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import ServeStats
+from repro.serving import (default_max_wait_ms, pipeline_throughput,
+                           warmed_frontend, window_key)
+
+
+class _Partition:
+    def __init__(self, n_stages=2):
+        self.n_stages = n_stages
+
+
+class FakePipeline:
+    """Protocol-conformant fake with the calibration surface on top:
+    serve() counts frames into a real ServeStats, warmup() records that
+    it ran, reset_stats() zeroes the window."""
+
+    def __init__(self, batch_size=4, stages=2):
+        self.batch_size = batch_size
+        self.partition = _Partition(stages)
+        self.program = None
+        self.on_result = None
+        self.on_error = None
+        self.stats = ServeStats()
+        self.warmups = 0
+        self.serves = []
+
+    def warmup(self, frames):
+        self.warmups += 1
+
+    def serve(self, frames):
+        self.serves.append(len(frames))
+        self.stats.frames += len(frames)
+        self.stats.batches += -(-len(frames) // self.batch_size)
+        self.stats.wall_s += 0.01
+        return [np.zeros(1)] * len(frames)
+
+    def submit_batch(self, frames, n_valid, tag=None):
+        if self.on_result:
+            self.on_result(tag, [f.copy() for f in frames[:n_valid]])
+
+    def flush_inflight(self):
+        pass
+
+    def reset_stats(self):
+        self.stats = ServeStats()
+
+    def replica_counts(self):
+        return None
+
+
+def test_default_max_wait_is_one_batch_window():
+    assert default_max_wait_ms(16, 100.0) == pytest.approx(160.0)
+    assert default_max_wait_ms(4, 50.0) == pytest.approx(80.0)
+    # Rate 0 (or negative) cannot define a window: fixed 50ms fallback.
+    assert default_max_wait_ms(16, 0.0) == 50.0
+
+
+def test_pipeline_throughput_measures_a_clean_window():
+    """The phase-1 pass: warmup (via the executor's own warmup hook when
+    it has one), one unloaded single-batch traversal, stats reset, then
+    the saturating closed-loop pass — so the returned snapshot covers
+    exactly the steady-state serve and nothing before it."""
+    px = FakePipeline(batch_size=4)
+    stream = np.zeros((12, 2, 2, 1), np.float32)
+    warmup_s, lat1_s, ph1 = pipeline_throughput(px, stream, 4)
+    assert px.warmups == 1                      # warmup hook preferred
+    assert warmup_s >= 0 and lat1_s > 0
+    # serve() ran twice: the unloaded traversal (one batch) and the
+    # measured stream; the snapshot covers only the latter.
+    assert px.serves == [4, 12]
+    assert ph1.frames == 12 and ph1.batches == 3
+    # Snapshot, not alias: later serving must not mutate the phase-1
+    # numbers the artifact records.
+    px.serve(list(stream))
+    assert ph1.frames == 12
+
+
+def test_pipeline_throughput_without_warmup_hook():
+    class NoWarmup(FakePipeline):
+        warmup = None
+    px = NoWarmup(batch_size=4)
+    stream = np.zeros((8, 2, 2, 1), np.float32)
+    _, _, ph1 = pipeline_throughput(px, stream, 4)
+    # The warmup fell back to a serve() pass: 3 serves total.
+    assert px.serves == [4, 4, 8]
+    assert ph1.frames == 8
+
+
+def test_warmed_frontend_seeds_both_channels():
+    """Estimator warm-start convention: window channel at the measured
+    batch window, latency channel at the measured unloaded traversal
+    when given (it outranks the stages x window formula)."""
+    px = FakePipeline(batch_size=4, stages=3)
+    fe = warmed_frontend(px, steady=100.0, rate=50.0, batch=4,
+                         max_wait_ms=None, admission_control=True,
+                         flush_guard_ms=None, lat1_s=0.5)
+    try:
+        est = fe.estimator
+        assert est.estimate(window_key(4)) == pytest.approx(0.04)
+        assert est.estimate(4) == pytest.approx(0.5)   # measured wins
+        # max_wait defaults to one batch window at min(rate, steady).
+        assert fe.max_wait_s == pytest.approx(4 / 50.0)
+    finally:
+        fe.close()
+
+
+def test_warmed_frontend_formula_fallback_and_explicit_wait():
+    """Without a measured traversal the latency channel falls back to
+    stages x replicas x window; an explicit max_wait_ms is taken as
+    given."""
+    px = FakePipeline(batch_size=4, stages=3)
+    fe = warmed_frontend(px, steady=100.0, rate=400.0, batch=4,
+                         max_wait_ms=7.5, admission_control=False,
+                         flush_guard_ms=None)
+    try:
+        est = fe.estimator
+        assert est.estimate(4) == pytest.approx(3 * 0.04)
+        assert fe.max_wait_s == pytest.approx(0.0075)
+    finally:
+        fe.close()

@@ -26,7 +26,9 @@ class EchoExecutor:
     def __init__(self, batch_size=4, delay_s=0.0):
         self.batch_size = batch_size
         self.delay_s = delay_s
+        self.program = None         # no compiled program: skip shape checks
         self.on_result = None
+        self.on_error = None
         self.dispatched = []        # list of tag tuples, in arrival order
 
     def submit_batch(self, frames, n_valid, tag=None):
@@ -35,6 +37,15 @@ class EchoExecutor:
             time.sleep(self.delay_s)
         if self.on_result:
             self.on_result(tag, [f.copy() for f in frames[:n_valid]])
+
+    def flush_inflight(self):
+        pass                        # delivers synchronously from submit
+
+    def reset_stats(self):
+        pass
+
+    def replica_counts(self):
+        return None
 
 
 class GateExecutor(EchoExecutor):

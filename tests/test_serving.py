@@ -364,12 +364,23 @@ def test_frontend_backpressure_bounded_queue():
 
     class StallExecutor:
         batch_size = 2
+        program = None
         on_result = None
+        on_error = None
 
         def submit_batch(self, frames, n_valid, tag=None):
             release.wait(timeout=30)
             if self.on_result:
                 self.on_result(tag, np.zeros((n_valid, 1)))
+
+        def flush_inflight(self):
+            pass
+
+        def reset_stats(self):
+            pass
+
+        def replica_counts(self):
+            return None
 
     ex = StallExecutor()
     fe = AsyncFrontend(ex, max_wait_ms=5.0, max_queue=2)
@@ -392,10 +403,21 @@ def test_frontend_resolves_requests_on_executor_failure():
     converges, later submits still get answers."""
     class BrokenExecutor:
         batch_size = 2
+        program = None
         on_result = None
+        on_error = None
 
         def submit_batch(self, frames, n_valid, tag=None):
             raise RuntimeError("stage worker died")
+
+        def flush_inflight(self):
+            pass
+
+        def reset_stats(self):
+            pass
+
+        def replica_counts(self):
+            return None
 
     fe = AsyncFrontend(BrokenExecutor(), max_wait_ms=5.0)
     f = np.zeros((4, 4, 1), np.float32)

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.serving import (AsyncFrontend, ReplicaPool,
-                           ServiceTimeEstimator)
+                           ServiceTimeEstimator, TenantMux)
 
 N_PRODUCERS = 8
 N_FRAMES = 64
@@ -31,7 +31,9 @@ class SlowEchoExecutor:
     def __init__(self, batch_size=16, delay_s=0.002):
         self.batch_size = batch_size
         self.delay_s = delay_s
+        self.program = None
         self.on_result = None
+        self.on_error = None
         self.batches = 0
 
     def submit_batch(self, frames, n_valid, tag=None):
@@ -39,6 +41,15 @@ class SlowEchoExecutor:
         time.sleep(self.delay_s)
         if self.on_result:
             self.on_result(tag, [f.copy() for f in frames[:n_valid]])
+
+    def flush_inflight(self):
+        pass
+
+    def reset_stats(self):
+        pass
+
+    def replica_counts(self):
+        return None
 
 
 def _frame(producer: int, i: int) -> np.ndarray:
@@ -260,3 +271,47 @@ def test_multi_producer_replica_pool_reconciles_exactly():
     # Routing spread the load: every replica served something.
     assert all(r["completed_batches"] > 0 for r in counts)
     pool.close()
+
+
+def test_multi_producer_mixed_tenants_reconcile_per_tenant():
+    """The 8-producer lane, multi-tenant: producers split across two
+    tenants behind a :class:`TenantMux` of per-tenant fakes. No request
+    hangs, every request resolves to its own frame through its own
+    tenant's executor (batches are single-tenant by construction), and
+    the per-tenant rollups reconcile exactly with the per-producer
+    submissions — no cross-tenant leakage in either direction."""
+    exs = {"a": SlowEchoExecutor(batch_size=16, delay_s=0.002),
+           "b": SlowEchoExecutor(batch_size=16, delay_s=0.004)}
+    mux = TenantMux(exs, batch_size=16)
+    fe = AsyncFrontend(mux, max_wait_ms=20.0, max_queue=1024)
+
+    def submit_one(p, i):
+        return fe.submit(_frame(p, i), tenant="a" if p % 2 == 0 else "b",
+                         timeout=30)
+
+    reqs = _run_producers(fe, submit_one)
+    for p in range(N_PRODUCERS):
+        for r in reqs[p]:
+            assert r._event.wait(timeout=60), "request hung"
+    fe.close()
+    mux.close()
+
+    total = N_PRODUCERS * N_FRAMES
+    st = fe.stats
+    assert st.submitted == total
+    assert st.completed == total
+    assert st.failed == st.expired == st.rejected == 0
+    # Per-tenant reconciliation: each tenant's rollup counts exactly its
+    # producers' submissions, and together they cover everything.
+    ta, tb = st.tenant_row("a"), st.tenant_row("b")
+    assert ta.submitted == tb.submitted == total // 2
+    assert ta.completed == tb.completed == total // 2
+    assert ta.failed == tb.failed == 0
+    # Batches never mixed tenants: each fake served exactly its own
+    # tenant's frames (payloads encode the producer, producers encode
+    # the tenant).
+    for p in range(N_PRODUCERS):
+        for i, r in enumerate(reqs[p]):
+            np.testing.assert_array_equal(
+                np.asarray(r.result(timeout=1)), _frame(p, i))
+    assert exs["a"].batches > 0 and exs["b"].batches > 0
