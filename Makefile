@@ -29,6 +29,13 @@ test-stress:
 bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py all
 
+# Compiler front door smoke: import the example LeNet spec, verify its
+# int8 golden across MAC routes, and serve it through build_server.
+# Dependency-free (JSON path) — the same command CI runs.
+.PHONY: import-smoke
+import-smoke:
+	PYTHONPATH=src $(PYTHON) -m repro.launch.import_model examples/lenet.json --serve-frames 6 --batch 4 --stages 1
+
 # Exactly what the CI bench-smoke job runs (AlexNet-only, small batch):
 # build all four artifacts, schema-validate them, and gate against the
 # committed reference bands in benchmarks/baselines/.

@@ -14,6 +14,9 @@
   serve-multi : multi-tenant model zoo behind one frontend (aggregate
               mixed-traffic knee + tenant-isolation flood)
               -> BENCH_serve_multi.json
+  import-smoke : compiler front door on examples/lenet.json (import ->
+              cross-route golden check -> serve smoke); not part of
+              ``all`` — it is a gate, not a measurement
   ablation  : allocator objectives (paper greedy / exact / waterfill)
               + pipeline stage balance on the TPU mesh
   roofline  : three-term roofline per (arch x shape x mesh) cell
@@ -52,7 +55,8 @@ def main(argv=None) -> int:
     ap.add_argument("which", nargs="?", default="all",
                     choices=("all", "table1", "serve", "serve-async",
                              "serve-qos", "serve-knee", "serve-multi",
-                             "ablation", "roofline", "kernels"))
+                             "import-smoke", "ablation", "roofline",
+                             "kernels"))
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI setting (AlexNet-only, small batch)")
     ap.add_argument("--replicas", type=int, default=1,
@@ -92,6 +96,17 @@ def main(argv=None) -> int:
     if only in ("all", "serve-multi"):
         from benchmarks import serve_multi_bench
         serve_multi_bench.run(emit, quick=args.quick)
+    if only == "import-smoke":
+        import os
+        import time
+
+        from repro.launch.import_model import import_and_serve
+        spec = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "examples", "lenet.json")
+        t0 = time.perf_counter()
+        r = import_and_serve(spec, serve_frames=6, batch=4, stages=1)
+        emit("import_smoke.lenet", (time.perf_counter() - t0) * 1e6,
+             f"completed={r['serve']['completed']}/6")
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run_objectives(emit)

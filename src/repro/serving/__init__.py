@@ -105,7 +105,8 @@ from repro.serving.calibrate import (default_max_wait_ms,  # noqa: E402
                                      warmed_frontend)
 from repro.serving.server import (ProgramRegistry, Server,  # noqa: E402
                                   ServerConfig, TenantMux,
-                                  UnknownModelError, build_server)
+                                  UnknownModelError, build_server,
+                                  synthetic_stream, synthetic_stream_like)
 
 __all__ = [
     "Arrival",
@@ -141,6 +142,8 @@ __all__ = [
     "replay",
     "stage_devices",
     "step_cycles",
+    "synthetic_stream",
+    "synthetic_stream_like",
     "tag_tenant",
     "tenant_key",
     "warmed_frontend",

@@ -90,14 +90,19 @@ def compile_for_serving(model_name: str, *, bits: int = 8, seed: int = 0,
     return compile_model(m, params, bits=bits, calib_batch=calib, **kwargs)
 
 
-def synthetic_stream(model_name: str, frames: int,
-                     seed: int = 0) -> np.ndarray:
-    """The seeded synthetic frame stream every serve/bench entry point
-    shares (explicit RNG: identical frames run to run)."""
-    m = W.CNN_MODELS[model_name]()
+def synthetic_stream_like(model, frames: int, seed: int = 0) -> np.ndarray:
+    """The seeded synthetic frame stream for any :class:`CNNModel` —
+    paper or imported (explicit RNG: identical frames run to run)."""
     rng = np.random.default_rng(seed + 2)
     return rng.standard_normal(
-        (frames, m.input_hw, m.input_hw, m.input_ch), dtype=np.float32)
+        (frames, model.input_hw, model.input_hw, model.input_ch),
+        dtype=np.float32)
+
+
+def synthetic_stream(model_name: str, frames: int,
+                     seed: int = 0) -> np.ndarray:
+    """:func:`synthetic_stream_like` over a named paper CNN."""
+    return synthetic_stream_like(W.CNN_MODELS[model_name](), frames, seed)
 
 
 class ProgramRegistry:
@@ -109,10 +114,68 @@ class ProgramRegistry:
     def __init__(self):
         self._programs: dict[str, object] = {}
 
+    @staticmethod
+    def _io_contract(program):
+        """The (input shape, bits) contract a compiled program imposes
+        on submitted frames — None for opaque stand-ins (tests register
+        fakes), which then skip collision checking."""
+        model = getattr(program, "model", None)
+        bits = getattr(program, "bits", None)
+        if model is None or bits is None:
+            return None
+        return ((model.input_hw, model.input_hw, model.input_ch),
+                int(bits))
+
     def register(self, name: str, program) -> None:
         if name in self._programs:
             raise ValueError(f"model {name!r} already registered")
+        # Frames are validated by shape at Server.submit; two models
+        # with identical input shapes but different bit widths would
+        # accept each other's frames while quantizing them to different
+        # integer formats — refuse the ambiguity at registration.
+        new = self._io_contract(program)
+        if new is not None:
+            for other, prog in self._programs.items():
+                old = self._io_contract(prog)
+                if old is not None and old[0] == new[0] \
+                        and old[1] != new[1]:
+                    raise ValueError(
+                        f"model {name!r} (input {new[0]}, "
+                        f"{new[1]}-bit) collides with registered "
+                        f"{other!r} (input {old[0]}, {old[1]}-bit): "
+                        f"same frame shape under a different dtype "
+                        f"contract")
         self._programs[str(name)] = program
+
+    def register_imported(self, source, *, name: str | None = None,
+                          bits: int = 8, seed: int = 0,
+                          theta: int | None = None,
+                          golden_check: bool = True):
+        """The compiler front door: import ``source`` (a spec dict,
+        ``.json``/``.onnx`` path, or in-memory compiler ``Graph``),
+        lower it onto the engine contract, quantize it with the shared
+        serving conventions, and register the compiled program.
+
+        Returns ``(name, golden)`` — the id it registered under and the
+        int8 golden parity record. With ``golden_check`` (default) the
+        golden is generated on the exact-f32 MAC route and re-executed
+        on the int32 oracle route before registration: an import that
+        cannot reproduce its own golden across routes never enters the
+        zoo (raises :class:`repro.compiler.GoldenMismatch`)."""
+        from repro import compiler
+
+        model, params = compiler.import_source(source)
+        if name is None:
+            name = model.name
+        if name in self._programs:
+            raise ValueError(f"model {name!r} already registered")
+        prog = compiler.quantize(model, params, bits=bits, seed=seed,
+                                 theta=theta)
+        golden = compiler.make_golden(prog, seed=seed, route="f32")
+        if golden_check:
+            compiler.check_golden(prog, golden, seed=seed, route="oracle")
+        self.register(name, prog)
+        return name, golden
 
     def get(self, name: str):
         try:
@@ -161,7 +224,7 @@ class ServerConfig:
     output: str = "top1"
     seed: int = 0
     theta: int | None = None
-    replicas: int = 1
+    replicas: int | dict = 1           # fleet-wide, or {model: R} per tenant
     replica_mode: str = "pipeline"
     place_stages: bool = False
     max_wait_ms: float | None = None   # None: one batch window at the rate
@@ -170,6 +233,15 @@ class ServerConfig:
     flush_guard_ms: float | None = None
     tenant_shares: dict | None = None  # WRR weights; None = equal
     calib_frames: int | None = None    # None: (6 + 2*stages) * batch
+
+    def replicas_for(self, name: str) -> int:
+        """The replica count for one model: the fleet-wide int, or the
+        model's entry in a per-model dict (absent models serve
+        unreplicated — a hot tenant scales out without forcing R
+        replicas of every cold one)."""
+        if isinstance(self.replicas, dict):
+            return int(self.replicas.get(name, 1))
+        return int(self.replicas)
 
 
 @dataclasses.dataclass
@@ -528,6 +600,13 @@ def build_server(registry: ProgramRegistry, config: ServerConfig, *,
     error propagates."""
     if len(registry) == 0:
         raise ValueError("registry has no models to serve")
+    if isinstance(config.replicas, dict):
+        unknown = set(config.replicas) - set(registry.names())
+        if unknown:
+            raise ValueError(
+                f"ServerConfig.replicas names unregistered models "
+                f"{sorted(unknown)} (registered: "
+                f"{', '.join(sorted(registry.names()))})")
     calib_frames = (config.calib_frames if config.calib_frames is not None
                     else (6 + 2 * config.stages) * config.batch)
     runtimes: dict[str, TenantRuntime] = {}
@@ -535,7 +614,10 @@ def build_server(registry: ProgramRegistry, config: ServerConfig, *,
         for name, prog in registry.items():
             stream = (streams or {}).get(name)
             if stream is None:
-                stream = synthetic_stream(name, calib_frames, config.seed)
+                # Keyed off the compiled program's own model, so
+                # imported (non-paper) models calibrate the same way.
+                stream = synthetic_stream_like(prog.model, calib_frames,
+                                               config.seed)
             if len(stream) <= config.batch:
                 raise ValueError(
                     f"calibration stream for {name!r} has {len(stream)} "
@@ -545,7 +627,7 @@ def build_server(registry: ProgramRegistry, config: ServerConfig, *,
                                batch=config.batch, route=config.route,
                                output=config.output,
                                place_stages=config.place_stages,
-                               replicas=config.replicas,
+                               replicas=config.replicas_for(name),
                                replica_mode=config.replica_mode,
                                seed=config.seed)
             ex.start()

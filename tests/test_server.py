@@ -19,7 +19,7 @@ from repro.serving import (AsyncFrontend, Executor, ProgramRegistry,
                            UnknownModelError, build_server)
 
 
-def _tiny_model(name: str, hw: int, ch: int, seed: int):
+def _tiny_model(name: str, hw: int, ch: int, seed: int, bits: int = 8):
     """One small compiled program per 'model' — distinct input shapes so
     cross-tenant frame mixups cannot pass shape validation silently."""
     m = W.CNNModel(name, hw, ch, (
@@ -30,7 +30,7 @@ def _tiny_model(name: str, hw: int, ch: int, seed: int):
     p = cnn.init_params(m, jax.random.PRNGKey(seed))
     calib = jax.random.normal(jax.random.PRNGKey(seed + 1),
                               (2, hw, hw, ch))
-    return compile_model(m, p, bits=8, calib_batch=calib)
+    return compile_model(m, p, bits=bits, calib_batch=calib)
 
 
 ZOO = (("m-a", 8, 3), ("m-b", 8, 4), ("m-c", 12, 3), ("m-d", 12, 4))
@@ -67,6 +67,72 @@ def test_registry_typed_errors_and_order():
     # The error is typed (a KeyError subclass) and names the catalogue.
     assert isinstance(ei.value, KeyError)
     assert "vgg" in str(ei.value) and "alex" in str(ei.value)
+
+
+def test_unknown_model_error_lists_ids_sorted():
+    """Deterministic messages: the registered ids in the error read
+    sorted regardless of registration order."""
+    reg = ProgramRegistry()
+    for name in ("zf", "alex", "mid"):
+        reg.register(name, object())
+    with pytest.raises(UnknownModelError) as ei:
+        reg.get("ghost")
+    msg = str(ei.value)
+    assert "registered: alex, mid, zf" in msg
+
+
+def test_register_refuses_same_shape_different_bits():
+    """Frames are validated by shape at submit; two models with the
+    same input shape but different bit widths would take each other's
+    frames under different integer formats — refused at register."""
+    reg = ProgramRegistry()
+    reg.register("m8", _tiny_model("m8", 8, 3, seed=0))
+    p16 = _tiny_model("m16", 8, 3, seed=1, bits=16)
+    with pytest.raises(ValueError) as ei:
+        reg.register("m16", p16)
+    assert "dtype" in str(ei.value) and "m8" in str(ei.value)
+    # Same bits, same shape: fine (tenant routing is by model id).
+    reg.register("m8b", _tiny_model("m8b", 8, 3, seed=2))
+    # Different shape, different bits: no ambiguity, fine.
+    reg.register("m16w", _tiny_model("m16w", 12, 3, seed=3, bits=16))
+    # Opaque stand-ins (no model/bits contract) skip the check.
+    reg.register("fake", object())
+
+
+def test_per_model_replicas_dict():
+    """ServerConfig.replicas as {model: R}: the named tenant gets a
+    routed pool of R replicas, unnamed tenants serve unreplicated, and
+    a dict naming an unregistered model is refused before any executor
+    starts."""
+    cfg = ServerConfig(replicas={"hot": 3})
+    assert cfg.replicas_for("hot") == 3
+    assert cfg.replicas_for("cold") == 1
+    assert ServerConfig(replicas=2).replicas_for("anything") == 2
+
+    reg = ProgramRegistry()
+    reg.register("hot", _tiny_model("hot", 8, 3, seed=0))
+    reg.register("cold", _tiny_model("cold", 12, 3, seed=1))
+    streams = {
+        "hot": np.zeros((12, 8, 8, 3), np.float32),
+        "cold": np.zeros((12, 12, 12, 3), np.float32),
+    }
+    with pytest.raises(ValueError) as ei:
+        build_server(reg, ServerConfig(batch=4, stages=1,
+                                       replicas={"ghost": 2}),
+                     streams=streams)
+    assert "ghost" in str(ei.value)
+
+    srv = build_server(reg, ServerConfig(batch=4, stages=1,
+                                         replicas={"hot": 2}),
+                       streams=streams)
+    try:
+        assert getattr(srv.runtime("hot").executor, "n_replicas", 1) == 2
+        assert getattr(srv.runtime("cold").executor, "n_replicas", 1) == 1
+        st = srv.stats()
+        assert st["models"]["hot"]["replicas"] == 2
+        assert st["models"]["cold"]["replicas"] == 1
+    finally:
+        srv.close()
 
 
 def test_build_server_refuses_empty_registry_and_short_streams():
