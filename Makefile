@@ -37,7 +37,7 @@ import-smoke:
 	PYTHONPATH=src $(PYTHON) -m repro.launch.import_model examples/lenet.json --serve-frames 6 --batch 4 --stages 1
 
 # Exactly what the CI bench-smoke job runs (AlexNet-only, small batch):
-# build all four artifacts, schema-validate them, and gate against the
+# build every artifact, schema-validate them, and gate against the
 # committed reference bands in benchmarks/baselines/.
 .PHONY: bench-quick
 bench-quick:
@@ -46,8 +46,9 @@ bench-quick:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --quick --out BENCH_serve_qos.json
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --quick --arrival poisson --replicas-sweep 1,2,4 --out BENCH_serve_knee.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_multi_bench.py --quick --out BENCH_serve_multi.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_chaos_bench.py --quick --out BENCH_serve_chaos.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
-	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py --baseline benchmarks/baselines BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json BENCH_serve_multi.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py --baseline benchmarks/baselines BENCH_serve.json BENCH_serve_async.json BENCH_serve_qos.json BENCH_serve_knee.json BENCH_serve_multi.json BENCH_serve_chaos.json
 
 # Full async serving sweep (all four models, K in {1,2,4}, batch 32).
 .PHONY: bench-async
@@ -73,6 +74,15 @@ bench-knee:
 bench-multi:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_multi_bench.py --out BENCH_serve_multi.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_multi.json
+
+# Chaos serving (all four models): adversarial-arrival knee sweeps
+# (on/off, lognormal, Pareto, diurnal beside the uniform baseline) plus
+# the replica-kill / straggler / bus-drop fault replays, gated on
+# liveness (hung == 0, resolved_frac == 1.0).
+.PHONY: bench-chaos
+bench-chaos:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_chaos_bench.py --out BENCH_serve_chaos.json
+	PYTHONPATH=src:. $(PYTHON) benchmarks/validate_bench.py BENCH_serve_chaos.json
 
 # Knee-vs-R replication sweep (the PR headline): 4 forced host devices,
 # R in {1,2,4} routed replicas, uniform + poisson arrivals. R>1 brackets

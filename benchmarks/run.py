@@ -14,6 +14,10 @@
   serve-multi : multi-tenant model zoo behind one frontend (aggregate
               mixed-traffic knee + tenant-isolation flood)
               -> BENCH_serve_multi.json
+  serve-chaos : fault injection + adversarial traffic (replica kill /
+              straggler / bus-drop replays gated on liveness, plus
+              knee sweeps under hostile arrival processes)
+              -> BENCH_serve_chaos.json
   import-smoke : compiler front door on examples/lenet.json (import ->
               cross-route golden check -> serve smoke); not part of
               ``all`` — it is a gate, not a measurement
@@ -55,8 +59,8 @@ def main(argv=None) -> int:
     ap.add_argument("which", nargs="?", default="all",
                     choices=("all", "table1", "serve", "serve-async",
                              "serve-qos", "serve-knee", "serve-multi",
-                             "import-smoke", "ablation", "roofline",
-                             "kernels"))
+                             "serve-chaos", "import-smoke", "ablation",
+                             "roofline", "kernels"))
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI setting (AlexNet-only, small batch)")
     ap.add_argument("--replicas", type=int, default=1,
@@ -96,6 +100,9 @@ def main(argv=None) -> int:
     if only in ("all", "serve-multi"):
         from benchmarks import serve_multi_bench
         serve_multi_bench.run(emit, quick=args.quick)
+    if only in ("all", "serve-chaos"):
+        from benchmarks import serve_chaos_bench
+        serve_chaos_bench.run(emit, quick=args.quick)
     if only == "import-smoke":
         import os
         import time

@@ -23,6 +23,13 @@ Schemas are selected by the artifact's ``bench`` field:
   row is validated recursively and the ratios must reproduce from the
   rows' ``knee_qps``, so the CI gate on ``knee_vs_r1/2`` cannot drift
   from the data behind it;
+* ``serve_chaos`` — fault injection + adversarial traffic
+  (``benchmarks/serve_chaos_bench.py``): per model, adversarial-arrival
+  knee rows (each a full knee result, validated recursively beside the
+  uniform baseline) and one row per fault replay whose liveness
+  identities (``resolved``, ``hung``, ``resolved_frac``) must reproduce
+  from the outcome counts — the CI gates on hung == 0 and
+  resolved_frac == 1.0 cannot drift from the data behind them;
 * ``serve_multi`` — the multi-tenant model zoo
   (``benchmarks/serve_multi_bench.py``): per-tenant calibration rows,
   the aggregate-knee sweep (every probe carries per-tenant armed miss
@@ -88,7 +95,22 @@ REQUIRED_KNEE_SCALING_KEYS = ("device_count", "mode", "rows",
 REQUIRED_KNEE_PROBE_KEYS = ("arrival_fps", "sustained",
                             "armed_miss_rate", "armed_submitted",
                             "submitted", "completed", "expired",
-                            "rejected", "rejected_wait")
+                            "rejected", "rejected_wait", "pacing")
+
+REQUIRED_CHAOS_MODEL_KEYS = ("slo_ms", "uniform_knee_qps", "scenarios",
+                             "faults")
+REQUIRED_CHAOS_FAULT_KEYS = ("fault", "plan", "replicas", "arrival_fps",
+                             "fleet_steady_fps", "submitted", "completed",
+                             "failed", "expired", "rejected",
+                             "rejected_wait", "resolved", "hung",
+                             "resolved_frac", "armed_submitted",
+                             "armed_missed", "armed_miss_rate",
+                             "armed_p99_ms", "injected_failures",
+                             "injected_slowdowns", "pacing", "recovery",
+                             "router", "replica_rows")
+REQUIRED_CHAOS_RECOVERY_KEYS = ("window_s", "miss_target", "armed_total",
+                                "pre_fault_armed", "windows",
+                                "recovered_s")
 
 REQUIRED_MULTI_MODEL_KEYS = ("steady_fps", "modeled_fps_alg1", "share",
                              "slo_ms", "knee")
@@ -344,6 +366,125 @@ def _validate_knee_model(name: str, row: dict, errors: list[str]) -> None:
                       f"sustained probe ({max(sustained_rates)})")
 
 
+def _validate_chaos_fault(where: str, frow: dict,
+                          errors: list[str]) -> None:
+    """One fault replay row. The liveness identities must *reproduce*
+    from the outcome counts — the CI gates sit on ``hung`` and
+    ``resolved_frac``, and a gate is only meaningful if the gated number
+    cannot drift from the counts behind it."""
+    for key in REQUIRED_CHAOS_FAULT_KEYS:
+        if key not in frow:
+            errors.append(f"{where}: missing {key}")
+    for key in ("arrival_fps", "fleet_steady_fps"):
+        if not _positive(frow, key):
+            errors.append(f"{where}.{key}={frow.get(key)!r} not > 0")
+    counts = {k: frow.get(k) for k in
+              ("submitted", "completed", "failed", "expired", "rejected",
+               "rejected_wait", "resolved", "hung")}
+    if all(isinstance(v, int) for v in counts.values()):
+        outcomes = (counts["completed"] + counts["failed"]
+                    + counts["expired"] + counts["rejected"]
+                    + counts["rejected_wait"])
+        if counts["resolved"] != outcomes:
+            errors.append(f"{where}: resolved={counts['resolved']} does "
+                          f"not reproduce from outcome counts "
+                          f"({outcomes})")
+        if counts["hung"] != counts["submitted"] - counts["resolved"]:
+            errors.append(f"{where}: hung={counts['hung']} does not "
+                          f"reproduce from submitted - resolved "
+                          f"({counts['submitted']} - "
+                          f"{counts['resolved']})")
+        frac = frow.get("resolved_frac")
+        if counts["submitted"] > 0 and (
+                not isinstance(frac, (int, float))
+                or abs(frac - counts["resolved"] / counts["submitted"])
+                > 1e-5):
+            errors.append(f"{where}: resolved_frac={frac!r} does not "
+                          f"reproduce from {counts['resolved']} / "
+                          f"{counts['submitted']}")
+    miss = frow.get("armed_miss_rate")
+    if miss is not None and not (isinstance(miss, (int, float))
+                                 and 0 <= miss <= 1):
+        errors.append(f"{where}.armed_miss_rate={miss!r} not in [0, 1]")
+    fault = frow.get("fault")
+    if fault in ("kill_replica", "fail_at_t"):
+        # A fault replay where the fault never fired measures nothing.
+        for key in ("injected_failures", "failed"):
+            if not _positive(frow, key):
+                errors.append(f"{where}.{key}={frow.get(key)!r} not > 0 "
+                              f"— the {fault} fault never bit")
+    elif fault == "straggler":
+        if not _positive(frow, "injected_slowdowns"):
+            errors.append(f"{where}.injected_slowdowns="
+                          f"{frow.get('injected_slowdowns')!r} not > 0 "
+                          f"— the straggler fault never bit")
+    plan = frow.get("plan")
+    if not isinstance(plan, dict) or "kill_mode" not in plan:
+        errors.append(f"{where}: plan is not a recorded FaultPlan")
+    rec = frow.get("recovery")
+    if not isinstance(rec, dict):
+        errors.append(f"{where}: missing recovery report")
+        return
+    for key in REQUIRED_CHAOS_RECOVERY_KEYS:
+        if key not in rec:
+            errors.append(f"{where}.recovery: missing {key}")
+    rs = rec.get("recovered_s")
+    if rs is not None and (not isinstance(rs, (int, float)) or rs < 0):
+        errors.append(f"{where}.recovery.recovered_s={rs!r} not >= 0")
+    if not isinstance(rec.get("windows"), list):
+        errors.append(f"{where}.recovery.windows is not a list")
+
+
+def _validate_chaos_model(name: str, row: dict,
+                          errors: list[str]) -> None:
+    """One model's chaos row: scenario knees (each a full knee result,
+    validated recursively) plus one row per fault replay."""
+    for key in REQUIRED_CHAOS_MODEL_KEYS:
+        if key not in row:
+            errors.append(f"models.{name}: missing {key}")
+    scen = row.get("scenarios")
+    if not isinstance(scen, dict) or "uniform" not in scen:
+        errors.append(f"models.{name}: scenarios must include the "
+                      f"uniform baseline, got "
+                      f"{sorted(scen) if isinstance(scen, dict) else scen!r}")
+    else:
+        if len(scen) < 2:
+            errors.append(f"models.{name}: needs >= 1 adversarial "
+                          f"scenario beside uniform, got {sorted(scen)}")
+        for s, srow in scen.items():
+            where = f"models.{name}.scenarios.{s}"
+            if not isinstance(srow, dict):
+                errors.append(f"{where}: row is {type(srow).__name__}, "
+                              f"not object")
+                continue
+            _validate_knee_model(f"{name}.scenarios.{s}", srow, errors)
+            if srow.get("scenario") != s:
+                errors.append(f"{where}: scenario="
+                              f"{srow.get('scenario')!r} does not match "
+                              f"key {s!r}")
+        base = scen.get("uniform")
+        if isinstance(base, dict) and \
+                row.get("uniform_knee_qps") != base.get("knee_qps"):
+            errors.append(f"models.{name}: uniform_knee_qps="
+                          f"{row.get('uniform_knee_qps')!r} does not "
+                          f"match scenarios.uniform.knee_qps="
+                          f"{base.get('knee_qps')!r}")
+    faults = row.get("faults")
+    if not isinstance(faults, dict) or not faults:
+        errors.append(f"models.{name}: empty or missing faults")
+        return
+    for fname, frow in faults.items():
+        where = f"models.{name}.faults.{fname}"
+        if not isinstance(frow, dict):
+            errors.append(f"{where}: row is {type(frow).__name__}, "
+                          f"not object")
+            continue
+        if frow.get("fault") != fname:
+            errors.append(f"{where}: fault={frow.get('fault')!r} does "
+                          f"not match key {fname!r}")
+        _validate_chaos_fault(where, frow, errors)
+
+
 def _validate_multi(data: dict, errors: list[str]) -> None:
     """The multi-tenant artifact: per-tenant rows, the aggregate-knee
     sweep (each probe's ``sustained`` and ``worst_armed_miss_rate`` must
@@ -466,10 +607,11 @@ def validate(path: str) -> list[str]:
         errors.append(f"schema_version={data.get('schema_version')!r} != 1")
     bench = data.get("bench", "serve")
     if bench not in ("serve", "serve_async", "serve_qos", "serve_knee",
-                     "serve_multi"):
+                     "serve_multi", "serve_chaos"):
         errors.append(f"unknown bench kind {bench!r}")
         return errors
-    if bench in ("serve_qos", "serve_knee", "serve_multi") and \
+    if bench in ("serve_qos", "serve_knee", "serve_multi",
+                 "serve_chaos") and \
             not isinstance(data.get("seed"), int):
         errors.append(f"{bench} artifact must record its schedule seed")
     models = data.get("models")
@@ -487,6 +629,8 @@ def validate(path: str) -> list[str]:
             _validate_qos_model(name, row, errors)
         elif bench == "serve_knee":
             _validate_knee_model(name, row, errors)
+        elif bench == "serve_chaos":
+            _validate_chaos_model(name, row, errors)
         elif bench == "serve_async":
             _validate_async_model(name, row, errors)
     if bench == "serve_multi":

@@ -96,10 +96,16 @@ from repro.serving.partition import (StagePartition,  # noqa: E402
 from repro.serving.pipeline_executor import PipelineExecutor  # noqa: E402
 from repro.serving.replica_pool import ReplicaPool  # noqa: E402
 from repro.serving.router import LeastWaitRouter  # noqa: E402
-from repro.serving.traffic import (Arrival, TrafficClass,  # noqa: E402
-                                   armed_class_names, default_mix,
+from repro.serving.traffic import (SCENARIOS, Arrival,  # noqa: E402
+                                   TrafficClass, armed_class_names,
+                                   default_mix, make_scenario_schedule,
                                    make_schedule, merge_schedules,
-                                   parse_traffic_mix, replay, tag_tenant)
+                                   pacing_report, parse_traffic_mix,
+                                   record_trace, replay, tag_tenant,
+                                   trace_schedule)
+from repro.serving.chaos import (ChaosExecutor, FaultPlan,  # noqa: E402
+                                 ReplicaKilled, StageKilled,
+                                 install_stage_fault, recovery_report)
 from repro.serving.calibrate import (default_max_wait_ms,  # noqa: E402
                                      pipeline_throughput,
                                      warmed_frontend)
@@ -111,21 +117,26 @@ from repro.serving.server import (ProgramRegistry, Server,  # noqa: E402
 __all__ = [
     "Arrival",
     "AsyncFrontend",
+    "ChaosExecutor",
     "ClassStats",
     "DEFAULT_TENANT",
     "DeadlineExpired",
     "EXECUTOR_MEMBERS",
     "Executor",
+    "FaultPlan",
     "FrontendStats",
     "LeastWaitRouter",
     "PipelineExecutor",
     "ProgramRegistry",
+    "ReplicaKilled",
     "ReplicaPool",
     "RequestRejected",
+    "SCENARIOS",
     "ServedRequest",
     "Server",
     "ServerConfig",
     "ServiceTimeEstimator",
+    "StageKilled",
     "StagePartition",
     "TenantMux",
     "TrafficClass",
@@ -134,11 +145,16 @@ __all__ = [
     "build_server",
     "default_max_wait_ms",
     "default_mix",
+    "install_stage_fault",
+    "make_scenario_schedule",
     "make_schedule",
     "merge_schedules",
+    "pacing_report",
     "parse_traffic_mix",
     "partition_program",
     "pipeline_throughput",
+    "record_trace",
+    "recovery_report",
     "replay",
     "stage_devices",
     "step_cycles",
@@ -146,6 +162,7 @@ __all__ = [
     "synthetic_stream_like",
     "tag_tenant",
     "tenant_key",
+    "trace_schedule",
     "warmed_frontend",
     "window_key",
 ]

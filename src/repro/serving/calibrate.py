@@ -93,7 +93,13 @@ def warmed_frontend(px, steady: float, rate: float, batch: int, *,
     per-replica formula seed — router pricing is relative across
     replicas, so a shared bias cancels — and admission itself stays on
     the fleet numbers: the frontend's shared estimator observes the
-    interleaved completion beat of all R replicas."""
+    interleaved completion beat of all R replicas. The router's
+    fresh-start is *forced* (:meth:`LeastWaitRouter.reset_pricing`
+    before the warm seed): ``warm_start`` alone defers to existing
+    measurements, so a replica starved during the saturated calibration
+    pass would keep its stale high EWMA and be priced out of every
+    subsequent pick — the starvation-hysteresis liveness bug the chaos
+    fault replays flushed out."""
     from repro.serving.estimator import ServiceTimeEstimator
     from repro.serving.frontend import AsyncFrontend
     n_replicas = getattr(px, "n_replicas", 1)
@@ -105,6 +111,7 @@ def warmed_frontend(px, steady: float, rate: float, batch: int, *,
         est.warm_start(batch, lat1_s)
     router = getattr(px, "router", None)
     if router is not None:
+        router.reset_pricing()
         router.warm_start(n_replicas * warm,
                           px.partition.n_stages * n_replicas * warm)
     wait_ms = (max_wait_ms if max_wait_ms is not None

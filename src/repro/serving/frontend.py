@@ -335,6 +335,13 @@ class FrontendStats:
         return (self.completed + self.failed + self.expired
                 + self.rejected + self.rejected_wait)
 
+    @property
+    def hung(self) -> int:
+        """Submitted requests with no terminal outcome yet — the
+        liveness headline the chaos artifacts gate at zero (after
+        close(), every fault path must have resolved its requests)."""
+        return self.submitted - self.resolved
+
     def klass(self, name: str) -> ClassStats:
         cs = self.classes.get(name)
         if cs is None:

@@ -344,7 +344,11 @@ class PipelineExecutor:
                 try:
                     out = runner.dequantize(payload)[:n_valid]
                     if self.output == "top1":
-                        out = np.argmax(out.reshape(n_valid, -1), axis=-1)
+                        # reshape(0, -1) is ill-posed for an all-padding
+                        # batch; its top-1 is just empty.
+                        out = (np.argmax(out.reshape(n_valid, -1), axis=-1)
+                               if n_valid else
+                               np.zeros((0,), dtype=np.int64))
                 except BaseException as e:  # noqa: BLE001 - recorded
                     self._fail(e)
                     kind, payload = "err", e

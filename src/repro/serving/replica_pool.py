@@ -49,7 +49,9 @@ from repro.core.executor import ServeStats, normalize_frames
 from repro.core.program import EngineProgram
 from repro.serving.pipeline_executor import (DEFAULT_QUEUE_DEPTH,
                                              PipelineExecutor)
-from repro.serving.router import DEFAULT_STRAGGLER_FACTOR, LeastWaitRouter
+from repro.serving.router import (DEFAULT_PROBE_EVERY,
+                                  DEFAULT_QUARANTINE_AFTER,
+                                  DEFAULT_STRAGGLER_FACTOR, LeastWaitRouter)
 
 REPLICA_MODES = ("pipeline", "stage-shard")
 
@@ -58,19 +60,23 @@ REPLICA_MODES = ("pipeline", "stage-shard")
 class _Dispatch:
     """Pool-level tag wrapped around every replica submission: which
     replica got batch ``seq``, when, how many frames were real, and the
-    caller's own tag (None for the drain path)."""
+    caller's own tag (None for the drain path). ``probe`` marks router
+    health probes — synthetic all-padding batches that feed the router
+    (re-admission / straggler decay) but never touch live accounting."""
 
     seq: int
     replica: int
     n_valid: int
     t_disp: float
     tag: object
+    probe: bool = False
 
 
 def _fresh_row() -> dict:
     return {"dispatched_batches": 0, "dispatched_frames": 0,
             "completed_batches": 0, "completed_frames": 0,
-            "failed_batches": 0, "failed_frames": 0}
+            "failed_batches": 0, "failed_frames": 0,
+            "probe_batches": 0}
 
 
 class ReplicaPool:
@@ -98,6 +104,8 @@ class ReplicaPool:
                  devices: Sequence[object] | None = None,
                  router_seed: int = 0,
                  straggler_factor: float = DEFAULT_STRAGGLER_FACTOR,
+                 quarantine_after: int = DEFAULT_QUARANTINE_AFTER,
+                 probe_every: int = DEFAULT_PROBE_EVERY,
                  on_result: Callable[[object, np.ndarray], None] | None = None,
                  on_error: Callable[[object, BaseException], None] | None = None):
         if mode not in REPLICA_MODES:
@@ -132,7 +140,9 @@ class ReplicaPool:
         self.route = getattr(self.replicas[0], "route", route)
         self.router = LeastWaitRouter(self.n_replicas, self.batch_size,
                                       seed=router_seed,
-                                      straggler_factor=straggler_factor)
+                                      straggler_factor=straggler_factor,
+                                      quarantine_after=quarantine_after,
+                                      probe_every=probe_every)
 
         self.stats = ServeStats()
         self.stats._first_n = self.batch_size
@@ -279,6 +289,34 @@ class ReplicaPool:
                     row["failed_frames"] += n_valid
                     self._done.notify_all()
                 raise
+            self._maybe_probe(frames)
+
+    def _maybe_probe(self, frames: np.ndarray) -> None:
+        """Dispatch one all-padding probe batch when the router asks for
+        one (an excluded replica is due its health check). Probes ride
+        the live submit beat but live outside it: they never count in
+        ``_submitted``/``_collected`` or the outcome rows beyond their
+        own ``probe_batches`` counter, so no live request is ever
+        sacrificed to discover that a quarantined replica came back (or
+        that a flagged straggler's EWMA re-entered band)."""
+        p = self.router.probe_target()
+        if p is None:
+            return
+        disp = _Dispatch(seq=-1, replica=p, n_valid=1,
+                         t_disp=time.perf_counter(), tag=None, probe=True)
+        with self._lock:
+            self._rows[p]["probe_batches"] += 1
+        try:
+            # Fresh copy: the live replica may donate/consume its input
+            # buffer, and the probe replica must see intact frames. One
+            # valid frame, so the probe observes a real traversal.
+            self.replicas[p].submit_batch(np.array(frames, copy=True), 1,
+                                          tag=disp)
+        except BaseException:
+            # A dead replica refuses the probe synchronously: feed the
+            # router (quarantine persists) and move on — probes are
+            # best-effort by construction.
+            self.router.on_failure(p)
 
     def serve(self, frames: Iterable[np.ndarray]) -> list[np.ndarray]:
         """Convenience: submit a finite stream and drain."""
@@ -346,6 +384,10 @@ class ReplicaPool:
     def _replica_done(self, disp: _Dispatch, outputs) -> None:
         now = time.perf_counter()
         self.router.on_complete(disp.replica, now - disp.t_disp, now=now)
+        if disp.probe:
+            # Probe success = proof of life; on_complete above already
+            # re-admitted the replica / fed its EWMA. Nothing to count.
+            return
         with self._done:
             if self._collected == 0 and self._first_t0 is not None:
                 self.stats.first_batch_s = now - self._first_t0
@@ -362,6 +404,9 @@ class ReplicaPool:
 
     def _replica_error(self, disp: _Dispatch, exc: BaseException) -> None:
         self.router.on_failure(disp.replica)
+        if disp.probe:
+            # Failed probe: quarantine persists, no live batch was lost.
+            return
         with self._done:
             self._collected += 1
             row = self._rows[disp.replica]
@@ -393,8 +438,8 @@ class ReplicaPool:
 
     def replica_rows(self) -> list[dict]:
         """JSON-ready per-replica rows: outcome counters + device
-        placement + router view (picks, in-flight, straggler flag,
-        estimator channels)."""
+        placement + router view (picks, in-flight, straggler/quarantine
+        flags, estimator channels)."""
         counts = self.replica_counts()
         snap = self.router.snapshot()["replicas"]
         rows = []
@@ -404,5 +449,6 @@ class ReplicaPool:
                          "picks": snap[r]["picks"],
                          "inflight": snap[r]["inflight"],
                          "straggler": snap[r]["straggler"],
+                         "quarantined": snap[r]["quarantined"],
                          "estimator": snap[r]["estimator"]})
         return rows

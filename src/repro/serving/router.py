@@ -27,6 +27,24 @@ Placement policy, in order:
   the cold draw while a healthy replica exists, so a replica that went
   bad after warmup cannot win a coin toss it should lose.
 
+Two health states sit above pricing:
+
+* **quarantine** (dead, not slow): ``quarantine_after`` *consecutive*
+  hard failures (dispatch raised, or the batch came back as an error)
+  take the replica out of both the warm argmin and the cold draw — the
+  straggler flag cannot cover this case because a corpse produces no
+  latency observations to drift. Any completed batch clears the state.
+* **probes** (the recovery path for both states): an excluded replica
+  receives no traffic, so its estimator freezes and — without help — a
+  quarantined corpse that came back, or a straggler whose EWMA once
+  spiked, stays excluded forever. :meth:`probe_target` fixes that:
+  every ``probe_every``-th call (the pool invokes it once per real
+  dispatch) it nominates one idle injured replica for a *probe batch* —
+  traffic the pool synthesizes and never counts against live requests.
+  A probe completion re-admits a quarantined replica and feeds the
+  straggler EWMA until it re-enters band; a probe failure keeps the
+  quarantine (and costs no live request).
+
 The router never touches frames — :class:`~repro.serving.replica_pool.
 ReplicaPool` calls :meth:`pick` before each dispatch and
 :meth:`on_complete`/:meth:`on_failure` from the replicas' collector
@@ -47,6 +65,14 @@ from repro.serving.estimator import ServiceTimeEstimator, window_key
 # warm only when its priced wait still wins (it rarely does).
 DEFAULT_STRAGGLER_FACTOR = 3.0
 
+# Consecutive hard failures before a replica is quarantined (excluded
+# from all live-traffic picks until a probe batch completes).
+DEFAULT_QUARANTINE_AFTER = 3
+
+# One probe batch per this many live dispatches while any replica is
+# excluded (quarantined or flagged): the re-admission / EWMA-decay beat.
+DEFAULT_PROBE_EVERY = 8
+
 
 class LeastWaitRouter:
     """Place each micro-batch on the replica with the least estimated
@@ -59,17 +85,26 @@ class LeastWaitRouter:
 
     def __init__(self, n_replicas: int, batch_key, *, seed: int = 0,
                  straggler_factor: float = DEFAULT_STRAGGLER_FACTOR,
-                 alpha: float | None = None):
+                 alpha: float | None = None,
+                 quarantine_after: int = DEFAULT_QUARANTINE_AFTER,
+                 probe_every: int = DEFAULT_PROBE_EVERY):
         if n_replicas < 1:
             raise ValueError(f"n_replicas={n_replicas} < 1")
         if straggler_factor <= 1.0:
             raise ValueError(
                 f"straggler_factor={straggler_factor} must be > 1")
+        if quarantine_after < 1:
+            raise ValueError(
+                f"quarantine_after={quarantine_after} must be >= 1")
+        if probe_every < 1:
+            raise ValueError(f"probe_every={probe_every} must be >= 1")
         self.n_replicas = int(n_replicas)
         self.batch_key = batch_key
         self.straggler_factor = float(straggler_factor)
-        kw = {} if alpha is None else {"alpha": alpha}
-        self.estimators = [ServiceTimeEstimator(**kw)
+        self.quarantine_after = int(quarantine_after)
+        self.probe_every = int(probe_every)
+        self._est_kw = {} if alpha is None else {"alpha": alpha}
+        self.estimators = [ServiceTimeEstimator(**self._est_kw)
                            for _ in range(self.n_replicas)]
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
@@ -78,9 +113,16 @@ class LeastWaitRouter:
         # previous completion's timestamp, valid only while the replica
         # stayed busy across the gap (same discipline as the frontend).
         self._last_done: list[float | None] = [None] * self.n_replicas
+        self._consec_fails = [0] * self.n_replicas
+        self._quarantined = [False] * self.n_replicas
+        self._probe_tick = 0
+        self._probe_rr = 0
         self.picks = [0] * self.n_replicas
         self.cold_picks = 0
         self.straggler_skips = 0
+        self.probe_picks = 0
+        self.quarantine_events = 0
+        self.readmissions = 0
 
     # -- pricing -------------------------------------------------------------
 
@@ -108,6 +150,13 @@ class LeastWaitRouter:
             return False
         return mine > self.straggler_factor * float(np.median(known))
 
+    def is_quarantined(self, replica: int) -> bool:
+        """True while ``replica`` is excluded for repeated hard failures
+        (``quarantine_after`` consecutive). Cleared by any completion —
+        in practice a probe batch, since live traffic stops arriving."""
+        with self._lock:
+            return self._quarantined[replica]
+
     # -- placement -----------------------------------------------------------
 
     def pick(self) -> int:
@@ -121,27 +170,35 @@ class LeastWaitRouter:
             return 0
         waits = [self.estimated_wait_s(r) for r in range(self.n_replicas)]
         with self._lock:
-            if any(w is None for w in waits):
-                r = self._cold_pick_locked()
+            # Quarantined replicas sit out both paths (dead beats slow:
+            # their frozen estimator would otherwise keep pricing them
+            # attractively). If *everything* is quarantined, serve
+            # anyway — failing fast beats deadlocking the pool.
+            alive = [r for r in range(self.n_replicas)
+                     if not self._quarantined[r]]
+            if not alive:
+                alive = list(range(self.n_replicas))
+            if any(waits[i] is None for i in alive):
+                r = self._cold_pick_locked(alive)
                 self.cold_picks += 1
             else:
                 # Ties (fresh symmetric fleet) break toward the shorter
                 # queue, then the lowest index — deterministic.
-                r = min(range(self.n_replicas),
+                r = min(alive,
                         key=lambda i: (waits[i], self._inflight[i], i))
             self._inflight[r] += 1
             self.picks[r] += 1
         return r
 
-    def _cold_pick_locked(self) -> int:
+    def _cold_pick_locked(self, alive: list[int]) -> int:
         """Power-of-two-choices on queue depth, from the seeded RNG.
         Flagged stragglers sit out the draw while a healthy replica
         exists."""
-        pool = [r for r in range(self.n_replicas) if not self.is_straggler(r)]
-        if len(pool) < self.n_replicas:
-            self.straggler_skips += self.n_replicas - len(pool)
+        pool = [r for r in alive if not self.is_straggler(r)]
+        if len(pool) < len(alive):
+            self.straggler_skips += len(alive) - len(pool)
         if not pool:
-            pool = list(range(self.n_replicas))
+            pool = list(alive)
         if len(pool) == 1:
             return pool[0]
         a, b = self._rng.choice(len(pool), size=2, replace=False)
@@ -149,6 +206,36 @@ class LeastWaitRouter:
         if self._inflight[b] < self._inflight[a]:
             return b
         return a
+
+    def probe_target(self) -> int | None:
+        """Nominate one excluded replica for a probe batch, or ``None``.
+
+        The pool calls this once per live dispatch; every
+        ``probe_every``-th call while any replica is excluded
+        (quarantined, or flagged straggler) returns one such replica —
+        round-robin across the injured set — and registers the dispatch.
+        Only *idle* replicas are nominated: probing a replica with work
+        still in flight could block the submitting thread on its full
+        stage queue. The probe's :meth:`on_complete` is what re-admits a
+        quarantined replica and decays a straggler's frozen EWMA back
+        into band; its :meth:`on_failure` keeps the quarantine."""
+        if self.n_replicas == 1:
+            return None
+        flagged = [r for r in range(self.n_replicas) if self.is_straggler(r)]
+        with self._lock:
+            injured = [r for r in range(self.n_replicas)
+                       if (self._quarantined[r] or r in flagged)
+                       and self._inflight[r] == 0]
+            if not injured or injured == list(range(self.n_replicas)):
+                return None
+            self._probe_tick += 1
+            if self._probe_tick % self.probe_every:
+                return None
+            r = injured[self._probe_rr % len(injured)]
+            self._probe_rr += 1
+            self._inflight[r] += 1
+            self.probe_picks += 1
+        return r
 
     # -- feedback ------------------------------------------------------------
 
@@ -174,14 +261,26 @@ class LeastWaitRouter:
             # behind this completion; an idle gap is not a service time.
             self._last_done[replica] = (
                 now if self._inflight[replica] > 0 else None)
+            # A completed batch is proof of life: clear the failure
+            # streak, and re-admit a quarantined replica (probe success).
+            self._consec_fails[replica] = 0
+            if self._quarantined[replica]:
+                self._quarantined[replica] = False
+                self.readmissions += 1
 
     def on_failure(self, replica: int) -> None:
         """A dispatched batch failed (or never reached the replica):
-        release the slot and drop the window anchor — the failure gap is
-        not a throughput beat."""
+        release the slot, drop the window anchor — the failure gap is
+        not a throughput beat — and quarantine the replica once the
+        consecutive-failure streak reaches ``quarantine_after``."""
         with self._lock:
             self._inflight[replica] = max(0, self._inflight[replica] - 1)
             self._last_done[replica] = None
+            self._consec_fails[replica] += 1
+            if (not self._quarantined[replica]
+                    and self._consec_fails[replica] >= self.quarantine_after):
+                self._quarantined[replica] = True
+                self.quarantine_events += 1
 
     # -- calibration / reporting ---------------------------------------------
 
@@ -193,25 +292,56 @@ class LeastWaitRouter:
             est.warm_start(window_key(self.batch_key), window_s)
             est.warm_start(self.batch_key, latency_s)
 
+    def reset_pricing(self) -> None:
+        """Forget every replica's *measured* verdicts — estimator
+        channels, window anchors, failure streaks, quarantine flags —
+        so the next :meth:`warm_start` re-seeds the fleet level.
+
+        This is the replay-boundary counterpart of the frontend's
+        fresh-estimator-per-replay rule, and it exists because
+        :meth:`warm_start` alone cannot undo a starvation spiral: a
+        replica starved during a saturated calibration window keeps a
+        stale high latency EWMA, the warm argmin then routes nothing to
+        it, and — since a merely-mispriced replica is neither
+        quarantined nor (with R=2, where its own EWMA drags the fleet
+        median) straggler-flagged — no probe ever re-prices it. The
+        cumulative telemetry counters (picks, quarantine_events, ...)
+        and in-flight accounting survive; only pricing state resets."""
+        with self._lock:
+            self.estimators = [ServiceTimeEstimator(**self._est_kw)
+                               for _ in range(self.n_replicas)]
+            self._last_done = [None] * self.n_replicas
+            self._consec_fails = [0] * self.n_replicas
+            self._quarantined = [False] * self.n_replicas
+
     def inflight(self, replica: int) -> int:
         with self._lock:
             return self._inflight[replica]
 
     def snapshot(self) -> dict:
         """JSON-ready router state: per-replica picks, in-flight depth,
-        estimator channels, straggler flags, and the cold-start/skip
-        counters."""
+        estimator channels, straggler/quarantine flags, and the
+        cold-start/skip/probe counters."""
         with self._lock:
             inflight = list(self._inflight)
             picks = list(self.picks)
             cold, skips = self.cold_picks, self.straggler_skips
+            probes = self.probe_picks
+            quarantines, readmits = self.quarantine_events, self.readmissions
+            quarantined = list(self._quarantined)
+            fails = list(self._consec_fails)
         return {
             "n_replicas": self.n_replicas,
             "cold_picks": cold,
             "straggler_skips": skips,
+            "probe_picks": probes,
+            "quarantine_events": quarantines,
+            "readmissions": readmits,
             "replicas": [
                 {"replica": r, "picks": picks[r], "inflight": inflight[r],
                  "straggler": self.is_straggler(r),
+                 "quarantined": quarantined[r],
+                 "consecutive_failures": fails[r],
                  "estimator": self.estimators[r].snapshot()}
                 for r in range(self.n_replicas)],
         }

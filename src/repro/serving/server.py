@@ -1053,6 +1053,8 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
                place_stages: bool = False,
                replicas: int = 1, replica_mode: str = "pipeline",
                poisson: bool = False,
+               scenario: str | None = None,
+               scenario_params: dict | None = None,
                output: str = "top1", program=None,
                verbose: bool = True) -> dict:
     """Bracketing absolute-QPS sweep: find the knee — the maximum
@@ -1081,12 +1083,31 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
     rate instead of ``start_factor * steady`` — the knee-vs-R scaling
     sweep starts each R>1 bracket at the R=1 knee, so "replication never
     loses to one replica" is probed directly.
+
+    ``scenario`` selects any arrival process from
+    :data:`repro.serving.traffic.SCENARIOS` (``onoff``, ``pareto``, ...)
+    with knobs in ``scenario_params`` — the adversarial knees the chaos
+    bench sweeps; it supersedes the legacy ``poisson`` flag (which maps
+    to ``scenario="poisson"``). Every probe row records a
+    :func:`~repro.serving.traffic.pacing_report`, so the artifact shows
+    the rate the open loop *achieved*, not just the one it targeted.
     """
     from repro.serving.traffic import (armed_class_names, default_mix,
-                                       make_schedule, replay)
+                                       make_scenario_schedule,
+                                       pacing_report, replay,
+                                       resolve_scenario_params)
 
     if not 0.0 < miss_target < 1.0:
         raise ValueError(f"miss_target={miss_target} not in (0, 1)")
+    if scenario is None:
+        scenario = "poisson" if poisson else "uniform"
+        if scenario_params:
+            raise ValueError("scenario_params without a scenario")
+    elif poisson and scenario != "poisson":
+        raise ValueError(f"both poisson=True and scenario={scenario!r}")
+    # Validate the knobs once up front (fail before compiling anything);
+    # the per-probe call re-resolves with the probe's rate.
+    resolve_scenario_params(scenario, 0.0, **(scenario_params or {}))
     srv, rt, stream = _one_model_server(
         model_name, frames=frames, batch=batch, stages=stages, bits=bits,
         route=route, output=output, place_stages=place_stages,
@@ -1111,9 +1132,11 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
 
         def _probe(rate: float) -> dict:
             fe = srv.open_frontend(rate)
-            schedule = make_schedule(len(stream), rate, mix, seed=seed,
-                                     poisson=poisson)
-            replay(fe, stream, schedule)
+            schedule, _ = make_scenario_schedule(
+                scenario, len(stream), rate, mix, seed=seed,
+                **(scenario_params or {}))
+            reqs = replay(fe, stream, schedule)
+            pacing = pacing_report(schedule, reqs)
             fe.close()
             st = fe.stats
             cls = [st.klass(n) for n in armed if n in st.classes]
@@ -1144,6 +1167,7 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
                 "rejected": st.rejected,
                 "rejected_wait": st.rejected_wait,
                 "failed": st.failed,
+                "pacing": pacing,
             }
             if verbose:
                 print(f"[serve_knee] {model_name} probe {rate:8.2f} qps: "
@@ -1217,7 +1241,14 @@ def serve_knee(model_name: str, *, frames: int = 96, batch: int = 16,
         "start_qps": None if start_qps is None else round(start_qps, 3),
         "seed": seed,
         "slo_ms": slo_ms,
-        "poisson": poisson,
+        "poisson": scenario == "poisson",
+        "scenario": scenario,
+        # The resolved knobs minus rate_fps (each probe row carries its
+        # own rate): enough to regenerate any probe's schedule.
+        "scenario_params": {
+            k: v for k, v in resolve_scenario_params(
+                scenario, 0.0, **(scenario_params or {})).items()
+            if k != "rate_fps"},
         "miss_target": miss_target,
         "admission_control": admission_control,
         "flush_guard_ms": flush_guard_ms,

@@ -25,6 +25,11 @@ def _load_validate_bench():
 vb = _load_validate_bench()
 
 
+# Every knee probe records its achieved-vs-target pacing
+# (traffic.pacing_report) — the validator requires the key.
+_PACING = {"arrivals": 40, "target_fps": 12.0, "achieved_fps": 12.0,
+           "rate_ratio": 1.0, "lag_ms_mean": 0.1, "lag_ms_max": 0.5}
+
 ARTIFACT = {
     "bench": "serve_async",
     "quick": True,
@@ -152,11 +157,13 @@ def test_validate_rejects_seeded_knee_regression(tmp_path):
                 {"arrival_fps": 12.0, "sustained": True,
                  "armed_miss_rate": 0.0, "armed_submitted": 10,
                  "submitted": 40, "completed": 40, "expired": 0,
-                 "rejected": 0, "rejected_wait": 0},
+                 "rejected": 0, "rejected_wait": 0,
+                 "pacing": _PACING},
                 {"arrival_fps": 24.0, "sustained": False,
                  "armed_miss_rate": 0.5, "armed_submitted": 10,
                  "submitted": 40, "completed": 20, "expired": 0,
-                 "rejected": 0, "rejected_wait": 20},
+                 "rejected": 0, "rejected_wait": 20,
+                 "pacing": _PACING},
             ],
         }},
     }
@@ -188,11 +195,13 @@ def _knee_row(replicas, knee_qps):
             {"arrival_fps": knee_qps, "sustained": True,
              "armed_miss_rate": 0.0, "armed_submitted": 10,
              "submitted": 40, "completed": 40, "expired": 0,
-             "rejected": 0, "rejected_wait": 0},
+             "rejected": 0, "rejected_wait": 0,
+             "pacing": _PACING},
             {"arrival_fps": 2 * knee_qps, "sustained": False,
              "armed_miss_rate": 0.5, "armed_submitted": 10,
              "submitted": 40, "completed": 20, "expired": 0,
-             "rejected": 0, "rejected_wait": 20},
+             "rejected": 0, "rejected_wait": 20,
+             "pacing": _PACING},
         ],
     }
 

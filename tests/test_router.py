@@ -63,6 +63,10 @@ def test_router_rejects_bad_inputs():
         LeastWaitRouter(0, 4)
     with pytest.raises(ValueError):
         LeastWaitRouter(2, 4, straggler_factor=1.0)
+    with pytest.raises(ValueError):
+        LeastWaitRouter(2, 4, quarantine_after=0)
+    with pytest.raises(ValueError):
+        LeastWaitRouter(2, 4, probe_every=0)
 
 
 def test_warm_least_wait_picks_the_idle_replica():
@@ -96,6 +100,51 @@ def test_warm_router_prices_out_a_drifting_replica():
         r = router.pick()
         assert r == 1
         router.on_complete(1, 0.020)
+
+
+def test_reset_pricing_relevels_a_starved_replica():
+    """The starvation-hysteresis bug the chaos fault replays flushed
+    out: a replica left with a stale high latency EWMA after a
+    saturated calibration pass loses every warm argmin, gets no new
+    observations, and — being neither quarantined nor (at R=2, where
+    its own EWMA drags the fleet median) straggler-flagged — is starved
+    forever. warm_start alone cannot fix it (measurements outrank
+    seeds); reset_pricing + warm_start must re-level the fleet."""
+    router = LeastWaitRouter(2, 4, seed=0)
+    router.warm_start(0.010, 0.020)
+    router.on_complete(0, 0.500)       # calibration left 0 mispriced
+    router.on_complete(1, 0.020)
+    assert not router.is_straggler(0)  # median includes the victim
+    # warm_start defers to the stale measurement: still starved.
+    router.warm_start(0.010, 0.020)
+    picks = [router.pick() for _ in range(4)]
+    assert 0 not in picks
+    for r in picks:
+        router.on_complete(r, 0.020)
+    # The replay-boundary re-level restores the symmetric tie.
+    router.reset_pricing()
+    router.warm_start(0.010, 0.020)
+    assert router.estimated_wait_s(0) == pytest.approx(0.020)
+    assert router.pick() == 0
+    assert router.pick() == 1
+
+
+def test_reset_pricing_clears_quarantine_and_streaks():
+    """reset_pricing is a replay boundary: health verdicts reset with
+    the pricing (a fresh replay earns fresh verdicts), while in-flight
+    accounting and cumulative telemetry survive."""
+    router = LeastWaitRouter(2, 4, seed=0, quarantine_after=2)
+    for _ in range(2):
+        router.pick()
+    router.on_failure(0)
+    router.on_failure(0)
+    # One batch still in flight on replica 1 across the boundary.
+    assert router.is_quarantined(0)
+    router.reset_pricing()
+    assert not router.is_quarantined(0)
+    assert router.snapshot()["replicas"][0]["consecutive_failures"] == 0
+    assert router.inflight(1) == 1
+    assert router.quarantine_events == 1
 
 
 def test_cold_power_of_two_choices_is_seeded_deterministic():
@@ -218,8 +267,166 @@ def test_pool_failure_releases_router_slot_and_is_accounted():
 
 
 # ---------------------------------------------------------------------------
-# Device-slice co-partitioning
+# Quarantine + probe re-admission (dead-replica bugfix)
 # ---------------------------------------------------------------------------
+
+
+def test_router_quarantines_after_repeated_hard_failures():
+    """Repeated hard failures quarantine a replica out of *all* live
+    picks (warm and cold) — the straggler flag covers slow, not dead —
+    and a completed batch (probe success) re-admits it."""
+    router = LeastWaitRouter(2, 4, seed=0, quarantine_after=3)
+    router.warm_start(0.010, 0.020)
+    assert not router.is_quarantined(0)
+    for _ in range(3):
+        router.on_failure(0)
+    assert router.is_quarantined(0)
+    assert router.quarantine_events == 1
+    # Every live pick now lands on the survivor, warm pricing included
+    # (the corpse's frozen estimator would otherwise keep it attractive).
+    for _ in range(10):
+        r = router.pick()
+        assert r == 1
+        router.on_complete(1, 0.020)
+    snap = router.snapshot()
+    assert snap["replicas"][0]["quarantined"] is True
+    assert snap["replicas"][0]["consecutive_failures"] == 3
+    # Probe success = proof of life: re-admitted, streak cleared.
+    router.on_complete(0, 0.020)
+    assert not router.is_quarantined(0)
+    assert router.readmissions == 1
+    assert router.snapshot()["replicas"][0]["consecutive_failures"] == 0
+
+
+def test_router_all_quarantined_still_serves():
+    """With every replica quarantined the router must keep picking
+    (failing fast beats deadlocking the pool)."""
+    router = LeastWaitRouter(2, 4, seed=0, quarantine_after=1)
+    router.on_failure(0)
+    router.on_failure(1)
+    assert router.is_quarantined(0) and router.is_quarantined(1)
+    assert router.pick() in (0, 1)
+
+
+def test_probe_target_beats_and_feedback():
+    """probe_target nominates a quarantined replica every probe_every-th
+    call, only while idle; a failed probe keeps the quarantine, a
+    successful one re-admits."""
+    router = LeastWaitRouter(2, 4, seed=0, quarantine_after=2,
+                             probe_every=3)
+    assert router.probe_target() is None        # nothing injured: no tick
+    router.on_failure(0)
+    router.on_failure(0)
+    assert router.is_quarantined(0)
+    assert router.probe_target() is None        # tick 1
+    assert router.probe_target() is None        # tick 2
+    p = router.probe_target()                   # tick 3 -> probe due
+    assert p == 0
+    assert router.probe_picks == 1
+    assert router.inflight(0) == 1              # probe holds a slot
+    router.on_failure(0)                        # probe failed
+    assert router.is_quarantined(0)
+    for _ in range(2):
+        assert router.probe_target() is None
+    assert router.probe_target() == 0
+    router.on_complete(0, 0.010)                # probe succeeded
+    assert not router.is_quarantined(0)
+    assert router.readmissions == 1
+
+
+class FlakyExecutor(EchoExecutor):
+    """Fake replica that hard-fails every dispatch in a batch-count
+    window (its own 1-based counter), then recovers."""
+
+    def __init__(self, dead_from=3, dead_to=8, **kw):
+        super().__init__(**kw)
+        self.dead_from, self.dead_to = dead_from, dead_to
+
+    def submit_batch(self, frames, n_valid, tag=None):
+        self.batches += 1
+        if self.dead_from <= self.batches <= self.dead_to:
+            raise RuntimeError("replica down")
+        if self.on_result is not None:
+            self.on_result(tag, np.asarray(frames)[:n_valid].copy())
+
+
+def test_pool_kill_mid_stream_quarantines_steers_and_readmits():
+    """The kill-mid-stream regression: a replica that dies mid-stream is
+    quarantined after quarantine_after consecutive hard failures (before
+    this fix the router kept picking the corpse forever), the survivor
+    absorbs the stream, probe batches — not live requests — keep
+    checking the victim, and the first probe success re-admits it."""
+    victim = FlakyExecutor(batch_size=4, dead_from=3, dead_to=8)
+    survivor = EchoExecutor(batch_size=4, delay_s=0.005)
+    pool = ReplicaPool(executors=[victim, survivor], router_seed=0,
+                       quarantine_after=3, probe_every=2)
+    pool.router.warm_start(0.001, 0.002)
+    batch = np.zeros((4, 2, 2, 1), np.float32)
+    n, raised = 24, 0
+    for _ in range(n):
+        try:
+            pool.submit_batch(batch, 4)
+        except RuntimeError:
+            raised += 1
+    out = pool.drain()
+    pool.close()
+    router = pool.router
+    counts = pool.replica_counts()
+    # Exactly quarantine_after live batches were sacrificed to discover
+    # the death; every later failure is a probe (invisible to callers).
+    assert raised == 3
+    assert counts[0]["failed_batches"] == 3
+    assert counts[1]["failed_batches"] == 0
+    assert router.quarantine_events == 1
+    # The victim recovered (its fake comes back at batch 9): a probe
+    # re-admitted it and live traffic returned to it.
+    assert router.readmissions == 1
+    assert not router.is_quarantined(0)
+    assert counts[0]["probe_batches"] >= 2
+    assert router.probe_picks == counts[0]["probe_batches"]
+    assert counts[0]["completed_batches"] > 2   # pre-death + post-readmit
+    # Liveness: every live batch resolved — completed or raised — and
+    # probe outputs never leak into the drained results.
+    assert sum(c["completed_batches"] for c in counts) + raised == n
+    assert len(out) == (n - raised) * 4
+
+
+# ---------------------------------------------------------------------------
+# Straggler decay (degrade -> recover bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_flag_decays_when_ewma_reenters_band():
+    """Degrade -> recover: a flagged straggler is excluded from cold
+    draws, but probe completions keep feeding its EWMA, and once it
+    re-enters band the (dynamic) flag clears and the replica rejoins the
+    draw — before this fix an excluded replica got no observations and
+    stayed excluded forever."""
+    router = LeastWaitRouter(4, 4, seed=3, probe_every=4)
+    for r, lat in enumerate([0.010, 0.011, 0.012, 1.0]):
+        router.estimators[r].observe(4, lat)
+    assert router.is_straggler(3)
+    # Excluded from live cold draws...
+    picks = [router.pick() for _ in range(12)]
+    assert 3 not in picks
+    # ...but probe_target still nominates it (the decay path): inflight
+    # from the live picks above sits on 0..2, never 3.
+    probed = [router.probe_target() for _ in range(4)]
+    assert probed[:3] == [None, None, None] and probed[3] == 3
+    router.on_complete(3, 0.011)
+    # Recovery: fast probe completions walk the EWMA back into band.
+    for _ in range(40):
+        if not router.is_straggler(3):
+            break
+        p = None
+        while p is None:
+            p = router.probe_target()
+        assert p == 3
+        router.on_complete(3, 0.011)
+    assert not router.is_straggler(3)
+    # Back in the cold draw: the seeded p2c reaches it again.
+    picks = [router.pick() for _ in range(40)]
+    assert 3 in picks
 
 
 def test_device_slices_contiguous_cover_and_wrap():

@@ -14,8 +14,9 @@ import time
 import numpy as np
 import pytest
 
-from repro.serving import (AsyncFrontend, ReplicaPool,
-                           ServiceTimeEstimator, TenantMux)
+from repro.serving import (AsyncFrontend, PipelineExecutor, ReplicaPool,
+                           ServiceTimeEstimator, TenantMux,
+                           install_stage_fault)
 
 N_PRODUCERS = 8
 N_FRAMES = 64
@@ -315,3 +316,68 @@ def test_multi_producer_mixed_tenants_reconcile_per_tenant():
             np.testing.assert_array_equal(
                 np.asarray(r.result(timeout=1)), _frame(p, i))
     assert exs["a"].batches > 0 and exs["b"].batches > 0
+
+
+def test_stage_death_mid_batch_resolves_every_request():
+    """Chaos x stress: a *real* two-stage PipelineExecutor whose stage-1
+    worker dies mid-batch (injected via install_stage_fault) under the
+    full 8-producer flood. The liveness contract must hold through the
+    death: every request resolves to completed | failed (no deadlines
+    armed, so nothing may expire), the outcome counts reconcile exactly,
+    the batches that cleared stage 1 before the fault completed with
+    real answers, everything after resolves failed — and no producer or
+    request ever hangs."""
+    import jax
+
+    from repro.core import workload as W
+    from repro.core.program import compile_model
+    from repro.models import cnn
+
+    m = W.CNNModel("tiny", 16, 4, (
+        W.ConvLayer("c1", 4, 8, 3),
+        W.ConvLayer("p1", 8, 8, 2, stride=2, kind="pool"),
+        W.ConvLayer("c2", 8, 8, 3, groups=2),
+        W.ConvLayer("fc", 8 * 8 * 8, 10, 1, kind="fc"),
+    ))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 4))
+    prog = compile_model(m, p, bits=8, calib_batch=calib)
+
+    px = PipelineExecutor(prog, stages=2, batch_size=4)
+    # Stage 1 dies from its 6th micro-batch on: exactly 5 batches make
+    # it through the whole pipeline, everything else must fail cleanly
+    # (in-flight batches through on_error, later submits synchronously).
+    wrapper = install_stage_fault(px, stage=1, at_call=6)
+    px.start()
+    fe = AsyncFrontend(px, max_wait_ms=10.0, max_queue=4096)
+
+    def frame16(producer, i):
+        return np.full((16, 16, 4), (producer * 64 + i) % 7, np.float32)
+
+    reqs = _run_producers(
+        fe, lambda p_, i: fe.submit(frame16(p_, i), timeout=60))
+    for prod in range(N_PRODUCERS):
+        for r in reqs[prod]:
+            assert r._event.wait(timeout=60), "request hung"
+    fe.close()
+    px.close()
+
+    total = N_PRODUCERS * N_FRAMES
+    st = fe.stats
+    assert st.submitted == total
+    assert st.hung == 0
+    assert st.resolved == total
+    # Exact reconciliation under the fault: completed + failed covers
+    # everything (no deadlines => no expiry, queue ample => no rejects).
+    assert st.completed + st.failed == total
+    assert st.expired == st.rejected == st.rejected_wait == 0
+    # The fault actually fired, after exactly 5 clean stage-1 batches.
+    assert wrapper.calls >= 6
+    assert 0 < st.completed <= 5 * px.batch_size
+    assert st.failed == total - st.completed
+    for prod in range(N_PRODUCERS):
+        for r in reqs[prod]:
+            assert r.outcome in ("completed", "failed")
+            if r.outcome == "completed":
+                # A real traversal: top-1 class id out of the tiny CNN.
+                assert int(np.asarray(r.result(timeout=1))) in range(10)
