@@ -44,7 +44,7 @@ bench-quick:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_bench.py --quick --out BENCH_serve.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_async_bench.py --quick --out BENCH_serve_async.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_qos_bench.py --quick --out BENCH_serve_qos.json
-	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --quick --arrival poisson --replicas-sweep 1,2,4 --out BENCH_serve_knee.json
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src:. $(PYTHON) benchmarks/serve_knee_bench.py --quick --arrival poisson --replicas-sweep 1,2,4 --rescale --out BENCH_serve_knee.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_multi_bench.py --quick --out BENCH_serve_multi.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/serve_chaos_bench.py --quick --out BENCH_serve_chaos.json
 	PYTHONPATH=src:. $(PYTHON) benchmarks/table1.py --quick
@@ -94,4 +94,11 @@ bench-knee-scaling:
 
 .PHONY: lint
 lint:
-	ruff check src tests benchmarks examples
+	ruff check src tests benchmarks examples tools
+
+# Docs drift gate: every src/repro path, module reference, make target,
+# and CLI flag named in README.md / DESIGN.md / docs/OPERATIONS.md must
+# resolve against the tree. Pure text scan — no jax import.
+.PHONY: docs-check
+docs-check:
+	$(PYTHON) tools/docs_check.py

@@ -25,7 +25,14 @@ Two extensions ride on the same sweep:
   R=1 knee, so "replication never loses to one replica" is probed
   directly) and records a ``knee_scaling`` block per model —
   schema-validated and gated (``knee_r2 / knee_r1 >= 1``) in CI under
-  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``;
+* ``--rescale`` (default on; ``--no-rescale`` skips) drives a load ramp
+  across the R=1 knee with an ``ElasticController`` watching the
+  frontend: when the armed miss rate crosses the target, the controller
+  live-rescales the fleet (drain -> swap -> resume, no request dropped:
+  ``hung == 0`` is a hard CI gate) and the post-rescale knee is
+  re-bracketed on the same server — recorded as a ``knee_after_rescale``
+  block per model.
 
   PYTHONPATH=src:. python benchmarks/serve_knee_bench.py --quick \
       --arrival poisson --replicas-sweep 1,2,4                   # CI
@@ -42,7 +49,8 @@ import time
 import jax
 
 from repro.core import workload as W
-from repro.launch.serve_cnn import compile_for_serving, serve_knee
+from repro.launch.serve_cnn import (compile_for_serving, serve_knee,
+                                    serve_knee_rescale)
 from repro.serving import parse_traffic_mix
 
 SCHEMA_VERSION = 1
@@ -87,7 +95,8 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         place_stages: bool = False, poisson: bool = False,
         arrival: str = "uniform", replicas: int = 1,
         replica_mode: str = "pipeline",
-        replicas_sweep: list[int] | None = None) -> dict:
+        replicas_sweep: list[int] | None = None,
+        rescale: bool = True) -> dict:
     if arrival not in ("uniform", "poisson"):
         raise ValueError(f"unknown arrival {arrival!r}")
     if models is None:
@@ -119,6 +128,7 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
         "replicas": replicas,
         "replica_mode": replica_mode,
         "replicas_sweep": replicas_sweep,
+        "rescale": rescale,
         "device_count": jax.device_count(),
         "miss_target": miss_target,
         "max_factor": max_factor,
@@ -205,6 +215,32 @@ def run(emit, *, quick: bool = False, batch: int | None = None,
                           + ("" if r == 1
                              else f"(x{ratios[str(r)]})")
                           for r in replicas_sweep))
+        if rescale:
+            # Elastic-runtime row: ramp across the R=1 knee with the
+            # controller live, measure the drain-swap-resume rescale
+            # under load, then re-bracket the knee on the rescaled
+            # server. The ramp opens at the measured R=1 knee so the
+            # very first segment crosses it.
+            n = frames if frames is not None else (6 + 2 * stages) * batch
+            rrow = serve_knee_rescale(
+                model, frames=n, batch=batch, stages=stages, seed=seed,
+                slo_ms=pinned["slo_ms"], traffic_mix=mix,
+                miss_target=miss_target, start_qps=row["knee_qps"],
+                max_factor=max_factor, refine_iters=refine_iters,
+                flush_guard_ms=flush_guard_ms,
+                admission_control=admission_control,
+                place_stages=place_stages,
+                scenario="poisson" if base_poisson else None,
+                replica_mode=replica_mode, program=prog, verbose=True)
+            data["models"][model]["knee_after_rescale"] = rrow
+            emit(f"serve_knee/{model}/knee_after_rescale", 0.0,
+                 f"rescales={rrow['n_rescales']}"
+                 + ("(forced)" if rrow["forced"] else "")
+                 + f"|R{rrow['replicas_before']}->"
+                 f"{rrow['replicas_after']}|hung={rrow['hung']}|"
+                 f"miss {rrow['armed_miss_at_trigger']}->"
+                 f"{rrow['armed_miss_after_rescale']}|"
+                 f"knee={rrow['knee']['knee_qps']}qps")
     with open(out, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"\n[serve_knee_bench] wrote {out} ({len(data['models'])} "
@@ -263,6 +299,12 @@ def main(argv=None) -> int:
                     help="comma list, e.g. 1,2,4: knee-vs-R scaling "
                          "sweep (R>1 brackets open at the R=1 knee); "
                          "records a knee_scaling block per model")
+    ap.add_argument("--rescale", dest="rescale", action="store_true",
+                    default=True,
+                    help="elastic-runtime ramp: live rescale across the "
+                         "knee, records knee_after_rescale (default on)")
+    ap.add_argument("--no-rescale", dest="rescale", action="store_false",
+                    help="skip the elastic-runtime rescale ramp")
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--model", action="append", default=None,
                     choices=sorted(W.CNN_MODELS), dest="models")
@@ -284,7 +326,8 @@ def main(argv=None) -> int:
         arrival=args.arrival, replicas=args.replicas,
         replica_mode=args.replica_mode,
         replicas_sweep=([int(r) for r in args.replicas_sweep.split(",")]
-                        if args.replicas_sweep else None))
+                        if args.replicas_sweep else None),
+        rescale=args.rescale)
     print_csv(csv)
     return 0
 

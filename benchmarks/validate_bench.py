@@ -96,6 +96,19 @@ REQUIRED_KNEE_PROBE_KEYS = ("arrival_fps", "sustained",
                             "armed_miss_rate", "armed_submitted",
                             "submitted", "completed", "expired",
                             "rejected", "rejected_wait", "pacing")
+REQUIRED_KNEE_RESCALE_KEYS = ("batch", "stages", "seed", "slo_ms",
+                              "miss_target", "traffic_mix", "policy",
+                              "anchor_qps", "measured_steady_fps_r1",
+                              "segments", "rescale_events", "n_rescales",
+                              "forced", "replicas_before",
+                              "replicas_after", "armed_miss_at_trigger",
+                              "armed_miss_after_rescale",
+                              "miss_recovered", "hung", "knee")
+REQUIRED_RESCALE_EVENT_KEYS = ("model", "before", "after", "compile_s",
+                               "swap_s", "action", "reason")
+REQUIRED_RESCALE_SEGMENT_KEYS = ("label", "arrival_fps",
+                                 "armed_submitted", "armed_missed",
+                                 "armed_miss_rate", "replicas")
 
 REQUIRED_CHAOS_MODEL_KEYS = ("slo_ms", "uniform_knee_qps", "scenarios",
                              "faults")
@@ -308,12 +321,108 @@ def _validate_knee_scaling(name: str, block, errors: list[str]) -> None:
                           f"rows ({knee_r} / {knee_r1})")
 
 
+def _validate_knee_after_rescale(name: str, block,
+                                 errors: list[str]) -> None:
+    """The elastic-runtime ramp block: a live drain-swap-resume rescale
+    happened (``n_rescales >= 1``) with no request dropped or left
+    unresolved (``hung`` — the CI baseline pins it to 0), the recorded
+    replica topology must reproduce from the rescale events it
+    summarizes, and the nested post-rescale ``knee`` row is itself a
+    full knee result (validated recursively) measured at the rescaled
+    replica count."""
+    where = f"models.{name}.knee_after_rescale"
+    if not isinstance(block, dict):
+        errors.append(f"{where}: block is {type(block).__name__}, "
+                      f"not object")
+        return
+    for key in REQUIRED_KNEE_RESCALE_KEYS:
+        if key not in block:
+            errors.append(f"{where}: missing {key}")
+    events = block.get("rescale_events")
+    if not isinstance(events, list) or not events:
+        errors.append(f"{where}: empty or missing rescale_events — the "
+                      f"ramp must trigger (or force) a live rescale")
+        return
+    if block.get("n_rescales") != len(events):
+        errors.append(f"{where}: n_rescales={block.get('n_rescales')!r} "
+                      f"does not match {len(events)} recorded events")
+    for i, ev in enumerate(events):
+        ewhere = f"{where}.rescale_events[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{ewhere}: row is {type(ev).__name__}, "
+                          f"not object")
+            continue
+        for key in REQUIRED_RESCALE_EVENT_KEYS:
+            if key not in ev:
+                errors.append(f"{ewhere}: missing {key}")
+    first, last = events[0], events[-1]
+    if isinstance(first, dict) and isinstance(first.get("before"), dict) \
+            and first["before"].get("replicas") != \
+            block.get("replicas_before"):
+        errors.append(f"{where}: replicas_before="
+                      f"{block.get('replicas_before')!r} does not "
+                      f"reproduce from the first event "
+                      f"({first['before'].get('replicas')!r})")
+    if isinstance(last, dict) and isinstance(last.get("after"), dict) \
+            and last["after"].get("replicas") != \
+            block.get("replicas_after"):
+        errors.append(f"{where}: replicas_after="
+                      f"{block.get('replicas_after')!r} does not "
+                      f"reproduce from the last event "
+                      f"({last['after'].get('replicas')!r})")
+    hung = block.get("hung")
+    if not isinstance(hung, int) or hung < 0:
+        errors.append(f"{where}.hung={hung!r} not an int >= 0")
+    segments = block.get("segments")
+    if not isinstance(segments, list) or len(segments) < 2:
+        errors.append(f"{where}: needs >= 2 segments (ramp + recovery), "
+                      f"got {len(segments) if isinstance(segments, list) else segments!r}")
+    else:
+        for i, seg in enumerate(segments):
+            swhere = f"{where}.segments[{i}]"
+            if not isinstance(seg, dict):
+                errors.append(f"{swhere}: row is {type(seg).__name__}, "
+                              f"not object")
+                continue
+            for key in REQUIRED_RESCALE_SEGMENT_KEYS:
+                if key not in seg:
+                    errors.append(f"{swhere}: missing {key}")
+            miss = seg.get("armed_miss_rate")
+            if not (isinstance(miss, (int, float)) and 0 <= miss <= 1):
+                errors.append(f"{swhere}.armed_miss_rate={miss!r} "
+                              f"not in [0, 1]")
+    at, after = (block.get("armed_miss_at_trigger"),
+                 block.get("armed_miss_after_rescale"))
+    for key, v in (("armed_miss_at_trigger", at),
+                   ("armed_miss_after_rescale", after)):
+        if not (isinstance(v, (int, float)) and 0 <= v <= 1):
+            errors.append(f"{where}.{key}={v!r} not in [0, 1]")
+    if isinstance(at, (int, float)) and isinstance(after, (int, float)) \
+            and bool(block.get("miss_recovered")) != (after <= at):
+        errors.append(f"{where}: miss_recovered="
+                      f"{block.get('miss_recovered')!r} contradicts "
+                      f"miss {at} -> {after}")
+    knee = block.get("knee")
+    if not isinstance(knee, dict):
+        errors.append(f"{where}.knee is "
+                      f"{type(knee).__name__}, not object")
+        return
+    _validate_knee_model(f"{name}.knee_after_rescale.knee", knee, errors)
+    if knee.get("replicas") != block.get("replicas_after"):
+        errors.append(f"{where}.knee.replicas={knee.get('replicas')!r} "
+                      f"was not measured at replicas_after="
+                      f"{block.get('replicas_after')!r}")
+
+
 def _validate_knee_model(name: str, row: dict, errors: list[str]) -> None:
     for key in REQUIRED_KNEE_MODEL_KEYS:
         if key not in row:
             errors.append(f"models.{name}: missing {key}")
     if "knee_scaling" in row:
         _validate_knee_scaling(name, row["knee_scaling"], errors)
+    if "knee_after_rescale" in row:
+        _validate_knee_after_rescale(name, row["knee_after_rescale"],
+                                     errors)
     if not _positive(row, "measured_steady_fps"):
         errors.append(f"models.{name}.measured_steady_fps="
                       f"{row.get('measured_steady_fps')!r} not > 0")

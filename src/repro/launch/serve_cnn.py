@@ -48,12 +48,14 @@ import argparse
 
 from repro.core import workload as W
 from repro.serving.server import (compile_for_serving, serve, serve_async,
-                                  serve_knee, serve_qos, synthetic_stream)
+                                  serve_knee, serve_knee_rescale,
+                                  serve_qos, synthetic_stream)
 
 # Historical import surface: the serve paths started life in this
 # module, and the benches/tests import them from here.
 __all__ = ["compile_for_serving", "synthetic_stream", "serve",
-           "serve_async", "serve_qos", "serve_knee", "main"]
+           "serve_async", "serve_qos", "serve_knee", "serve_knee_rescale",
+           "main"]
 
 
 def main(argv=None) -> int:

@@ -106,6 +106,8 @@ from repro.serving.traffic import (SCENARIOS, Arrival,  # noqa: E402
 from repro.serving.chaos import (ChaosExecutor, FaultPlan,  # noqa: E402
                                  ReplicaKilled, StageKilled,
                                  install_stage_fault, recovery_report)
+from repro.serving.elastic import (ElasticController,  # noqa: E402
+                                   ElasticPolicy, RescaleDecision)
 from repro.serving.calibrate import (default_max_wait_ms,  # noqa: E402
                                      pipeline_throughput,
                                      warmed_frontend)
@@ -122,6 +124,8 @@ __all__ = [
     "DEFAULT_TENANT",
     "DeadlineExpired",
     "EXECUTOR_MEMBERS",
+    "ElasticController",
+    "ElasticPolicy",
     "Executor",
     "FaultPlan",
     "FrontendStats",
@@ -131,6 +135,7 @@ __all__ = [
     "ReplicaKilled",
     "ReplicaPool",
     "RequestRejected",
+    "RescaleDecision",
     "SCENARIOS",
     "ServedRequest",
     "Server",

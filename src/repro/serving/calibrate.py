@@ -1,9 +1,9 @@
 """One implementation of warmup / throughput calibration for every
 serve path.
 
-Three routines that used to live as private helpers inside
-``launch/serve_cnn.py`` (and were about to be copied a third time for
-per-tenant warm-start in the multi-model server):
+Three routines shared by the single-model serve paths, the
+multi-tenant server's per-tenant warm-start, and live rescale
+recalibration:
 
 - :func:`pipeline_throughput` — compile-warm a pipeline (or replica
   pool), measure the unloaded single-batch traversal, then measure
@@ -16,8 +16,10 @@ per-tenant warm-start in the multi-model server):
   probe.
 
 :func:`repro.serving.server.build_server` runs the same
-:func:`pipeline_throughput` per tenant, so a registry's warm-start
-numbers are measured by exactly the code the single-model benches use.
+:func:`pipeline_throughput` per tenant, and :meth:`Server.rescale
+<repro.serving.server.Server.rescale>` runs it on every candidate
+executor before swapping it live, so warm-start numbers everywhere are
+measured by exactly the code the single-model benches use.
 """
 
 from __future__ import annotations

@@ -107,6 +107,35 @@ class ServiceTimeEstimator:
         self.warm_start(window_key(shape), window_s)
         self.warm_start(shape, stages * replicas * window_s)
 
+    def rewarm(self, shape, seconds: float) -> None:
+        """Forcibly re-seed ``shape``'s estimate after a topology change.
+
+        Unlike :meth:`warm_start`, this *overwrites* a channel that has
+        real observations: when the executor underneath a frontend is
+        swapped (``Server.rescale``), the old plan's measured EWMA
+        describes a pipeline that no longer exists, and "measurements
+        outrank calibration" would pin admission to stale prices. The
+        observation count resets to zero so the swapped-in plan's own
+        batches take over at full EWMA weight."""
+        if seconds <= 0:
+            raise ValueError(f"rewarm seconds={seconds} not > 0")
+        with self._lock:
+            self._shapes[shape] = _ShapeEstimate(float(seconds), warm=True)
+
+    def rewarm_channels(self, shape, window_s: float, *,
+                        stages: int = 1, replicas: int = 1) -> None:
+        """Forced counterpart of :meth:`warm_start_channels` for a live
+        rescale: re-seed both admission channels for ``shape`` from the
+        *old* plan's measured window scaled to the new topology (the
+        caller computes ``window_s``; the latency channel gets the same
+        ``stages * replicas * window`` traversal formula). Existing
+        observations are discarded — they priced the old partition."""
+        if stages < 1 or replicas < 1:
+            raise ValueError(
+                f"stages={stages}, replicas={replicas} must be >= 1")
+        self.rewarm(window_key(shape), window_s)
+        self.rewarm(shape, stages * replicas * window_s)
+
     def observe(self, shape, seconds: float) -> None:
         """Fold one measured batch service time into ``shape``'s EWMA.
         Non-positive samples (clock skew) are dropped rather than

@@ -402,8 +402,8 @@ class AsyncFrontend:
     ``priority`` orders lanes within a tenant (higher drains first);
     ``deadline_ms`` arms drop-on-SLO-miss and the expedited flush;
     ``tenant`` names the model a request belongs to in a multi-model
-    deployment. All default to the PR-3 behaviour: one best-effort FIFO
-    class of one tenant.
+    deployment. All default to a single best-effort FIFO class of one
+    tenant.
 
     ``estimator`` is the shared :class:`ServiceTimeEstimator` driving
     the expedited flush (and admission), with channels keyed per tenant
@@ -419,7 +419,14 @@ class AsyncFrontend:
     the estimate + 2 ms. ``tenant_shares`` weights the round-robin
     batcher sweep across tenants (default: equal shares; tenants absent
     from the mapping get 1.0). Deadline-less requests are untouched by
-    the estimator knobs — the PR-3/PR-4 best-effort path is unchanged.
+    the estimator knobs — the plain best-effort path is unchanged.
+
+    :meth:`swap_executor` repoints a live frontend onto a freshly
+    calibrated executor between micro-batches — the elastic runtime's
+    drain-swap-resume (see :mod:`repro.serving.elastic`): dispatch
+    pauses, submits keep landing in lanes, in-flight batches deliver
+    on the old executor, then dispatch resumes on the new one. No
+    request is rejected, dropped, or reordered by a swap.
     """
 
     def __init__(self, executor, *, max_wait_ms: float = 5.0,
@@ -467,6 +474,16 @@ class AsyncFrontend:
         self.stats = FrontendStats()
         self._closing = threading.Event()
         self._lock = threading.Lock()
+        # Drain->swap->resume support: the batcher parks assembled
+        # batches at this gate while cleared (pause_dispatch), so a live
+        # executor swap happens strictly *between* micro-batches.
+        # _dispatching marks the window between passing the gate and
+        # the in-flight increment (both flipped under _lock), so the
+        # swap's quiescence check can never race a batch into the old
+        # executor.
+        self._dispatch_gate = threading.Event()
+        self._dispatch_gate.set()
+        self._dispatching = False
         # Lane state: (tenant, priority) -> FIFO deque of (req, frame).
         # _lane_cv guards lanes + per-lane counts; submit() waits on it
         # when its lane is full (backpressure), the batcher waits on it
@@ -710,6 +727,104 @@ class AsyncFrontend:
         with self._lock:
             return copy.deepcopy(self.stats)
 
+    # -- drain -> swap -> resume (elastic rescale) ---------------------------
+
+    def pause_dispatch(self) -> None:
+        """Hold every assembled micro-batch at the dispatch boundary.
+
+        Submits keep landing in the lanes (backpressure only when a lane
+        fills — nothing is rejected), the batcher keeps assembling, but
+        no new micro-batch enters the executor until
+        :meth:`resume_dispatch`. A closing frontend overrides the gate
+        so :meth:`close` always converges."""
+        self._dispatch_gate.clear()
+
+    def resume_dispatch(self) -> None:
+        """Reopen the dispatch gate after :meth:`pause_dispatch`."""
+        self._dispatch_gate.set()
+
+    def _quiescent(self) -> bool:
+        """True when no micro-batch is in flight *and* the batcher is
+        not mid-dispatch (between passing the gate and the in-flight
+        increment). Only meaningful while dispatch is paused."""
+        with self._lock:
+            return self._inflight_batches == 0 and not self._dispatching
+
+    def _merge_replica_delta(self) -> None:
+        """Fold the current executor's per-replica outcome delta since
+        the last baseline into ``stats.replicas`` (no-op for executors
+        without replica counters). Rows merge by replica index across
+        executor generations, so the sum over rows keeps reconciling
+        with fleet totals after a swap. Caller ensures the executor is
+        quiescent for this frontend's traffic."""
+        if self._replica_base is None:
+            return
+        rows = self.executor.replica_counts()
+        with self._lock:
+            for r, base in enumerate(self._replica_base):
+                delta = {k: rows[r][k] - base[k] for k in base}
+                cur = self.stats.replicas.get(str(r))
+                if cur is None:
+                    self.stats.replicas[str(r)] = delta
+                else:
+                    for k, v in delta.items():
+                        cur[k] = cur.get(k, 0) + v
+
+    def swap_executor(self, new_executor, *,
+                      drain_timeout_s: float = 60.0):
+        """Atomically replace the executor underneath this frontend.
+
+        The drain->swap->resume sequence behind a live rescale
+        (``Server.rescale`` / the elastic controller): pause dispatch at
+        the micro-batch boundary, wait until every dispatched batch has
+        resolved on the old executor (int8 stage boundaries carry no
+        cross-batch state, so a drained executor holds nothing), move
+        the ``on_result``/``on_error`` slots and the replica-counter
+        baseline over, then reopen the gate. Submits are never rejected
+        — requests arriving during the drain queue in their lanes and
+        dispatch to the new executor in submission order, so no request
+        is dropped or reordered. Returns the old executor (drained;
+        caller closes it). Raises ``TimeoutError`` if the old executor
+        does not drain within ``drain_timeout_s`` (the gate reopens and
+        the frontend continues on the old executor)."""
+        _require_executor(new_executor)
+        if new_executor is self.executor:
+            raise ValueError("swap_executor with the executor already "
+                             "installed")
+        if new_executor.on_result is not None:
+            raise ValueError("executor already has an on_result consumer")
+        if self._closing.is_set():
+            raise RuntimeError("frontend is closed")
+        self.pause_dispatch()
+        try:
+            deadline = time.perf_counter() + float(drain_timeout_s)
+            while not self._quiescent():
+                if time.perf_counter() > deadline:
+                    raise TimeoutError(
+                        "executor did not drain within "
+                        f"{drain_timeout_s:.1f}s; swap aborted")
+                # Single-jit executors deliver on flush, not from a
+                # collector thread — keep flushing while we wait.
+                self.executor.flush_inflight()
+                time.sleep(0.001)
+            old = self.executor
+            self._merge_replica_delta()
+            old.on_result = None
+            old.on_error = None
+            new_executor.on_result = self._on_result
+            new_executor.on_error = self._on_error
+            self._replica_base = new_executor.replica_counts()
+            with self._lock:
+                self.executor = new_executor
+                self.batch_size = int(new_executor.batch_size)
+                self._window_key = window_key(self.batch_size)
+                # The inter-completion beat spans two topologies at the
+                # swap point; never observe a window across it.
+                self._last_done.clear()
+            return old
+        finally:
+            self.resume_dispatch()
+
     def close(self) -> None:
         """Stop accepting requests, flush everything queued, and wait for
         every in-flight request to resolve (completed, failed, expired,
@@ -736,14 +851,10 @@ class AsyncFrontend:
                 raise TimeoutError("in-flight requests did not complete")
             time.sleep(0.001)
         # Every request has resolved, so the pool's counters are
-        # quiescent for this frontend's traffic: record the per-replica
-        # outcome delta over our lifetime (exact fleet reconciliation).
-        if self._replica_base is not None:
-            rows = self.executor.replica_counts()
-            with self._lock:
-                self.stats.replicas = {
-                    str(r): {k: rows[r][k] - base[k] for k in base}
-                    for r, base in enumerate(self._replica_base)}
+        # quiescent for this frontend's traffic: fold in the per-replica
+        # outcome delta over our lifetime (exact fleet reconciliation —
+        # added to any deltas already merged at executor swaps).
+        self._merge_replica_delta()
         # Release the executor for a future frontend (it is documented
         # as reusable across drains) and drop the cross-reference.
         self.executor.on_result = None
@@ -932,18 +1043,43 @@ class AsyncFrontend:
         died) resolves this batch's requests with the error instead of
         killing the batcher thread — later requests still get answers
         (more errors, most likely), and close() still converges."""
-        now = time.perf_counter()
-        live = []
-        for r, f in batch:
-            if r.deadline_s is not None and now > r.deadline_s:
-                self._drop_expired(r)
-            else:
-                live.append((r, f))
-        if not live:
+        # The swap boundary: while pause_dispatch holds the gate, this
+        # assembled batch parks here — still counted as assembling, so
+        # admission keeps pricing it — and a concurrent swap_executor
+        # can drain the old executor knowing no batch is mid-entry
+        # (_dispatching flips under the same lock as the in-flight
+        # increment). A closing frontend overrides the gate so every
+        # parked request still resolves.
+        while True:
             with self._lock:
-                self._assembling = 0
-                self._assembling_tenant = None
-            return
+                if self._dispatch_gate.is_set() or self._closing.is_set():
+                    self._dispatching = True
+                    break
+            self._dispatch_gate.wait(timeout=0.05)
+        try:
+            now = time.perf_counter()
+            live = []
+            for r, f in batch:
+                if r.deadline_s is not None and now > r.deadline_s:
+                    self._drop_expired(r)
+                else:
+                    live.append((r, f))
+            if not live:
+                with self._lock:
+                    self._assembling = 0
+                    self._assembling_tenant = None
+                return
+            # A swap may have shrunk batch_size while this batch was
+            # parked; split so no chunk exceeds the compiled shape.
+            bs = self.batch_size
+            chunks = [live[i:i + bs] for i in range(0, len(live), bs)]
+            for chunk in chunks:
+                self._dispatch_chunk(chunk, reason, len(batch))
+        finally:
+            with self._lock:
+                self._dispatching = False
+
+    def _dispatch_chunk(self, live, reason: str, assembled_n: int) -> None:
         reqs = tuple(r for r, _ in live)
         tenant = reqs[0].tenant
         t_disp = time.perf_counter()
@@ -958,7 +1094,7 @@ class AsyncFrontend:
             self.stats.batches += 1
             self._inflight_batches += 1
             self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
-            if len(batch) >= self.batch_size:
+            if assembled_n >= self.batch_size:
                 self.stats.flushes_full += 1
             elif reason == "deadline":
                 self.stats.flushes_deadline += 1

@@ -249,6 +249,27 @@ class PipelineExecutor:
         """Protocol no-op: the collector thread delivers results
         continuously, so there is never anything to flush on demand."""
 
+    def wait_idle(self, timeout: float | None = None) -> bool:
+        """Block until every submitted micro-batch has cleared all K
+        stages (tagged and untagged alike) — the executor-side half of a
+        drain->swap->resume handoff. Unlike :meth:`drain` this neither
+        flushes the partial tail nor consumes results; it only waits.
+        Returns ``True`` when idle, ``False`` on timeout. Raises if a
+        stage worker has failed (a dead stage will never go idle)."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + float(timeout))
+        with self._done:
+            while self._collected < self._submitted and self._error is None:
+                remaining = 0.1
+                if deadline is not None:
+                    remaining = min(remaining,
+                                    deadline - time.perf_counter())
+                    if remaining <= 0:
+                        return False
+                self._done.wait(timeout=remaining)
+        self._check_error()
+        return True
+
     def replica_counts(self) -> list | None:
         """Protocol conformance: a single pipeline is not a replica
         fleet."""

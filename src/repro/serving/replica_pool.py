@@ -337,6 +337,26 @@ class ReplicaPool:
         """Protocol no-op: every replica's collector thread delivers
         results continuously."""
 
+    def wait_idle(self, timeout: float | None = None) -> bool:
+        """Block until every dispatched micro-batch has cleared its
+        replica — the fleet-side half of a drain->swap->resume handoff.
+        Does not flush the partial tail or consume drain results; only
+        waits. Returns ``True`` when idle, ``False`` on timeout. Raises
+        if a replica failed on the untagged drain path."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + float(timeout))
+        with self._done:
+            while self._collected < self._submitted and self._error is None:
+                remaining = 0.1
+                if deadline is not None:
+                    remaining = min(remaining,
+                                    deadline - time.perf_counter())
+                    if remaining <= 0:
+                        return False
+                self._done.wait(timeout=remaining)
+        self._check_error()
+        return True
+
     def reset_stats(self) -> None:
         """Zero the fleet serve statistics and each replica's (between
         drains, not mid-stream). Per-replica dispatch rows and router

@@ -355,3 +355,63 @@ def test_server_over_fakes_is_cheap_to_reason_about():
     mux.close()
     mux.close()
     assert Server is not None and ServerConfig is not None
+
+
+# ---------------------------------------------------------------------------
+# Live rescale (drain -> swap -> resume)
+# ---------------------------------------------------------------------------
+
+
+def test_rescale_live_one_model():
+    """R 1 -> 2 on a serving one-model server: traffic before and after
+    the swap completes, the event records the topology transition and
+    both timing halves, the runtime's executor/calibration are
+    replaced, and close() tears the rescaled fleet down cleanly."""
+    reg = ProgramRegistry()
+    name, hw, ch = ZOO[0]
+    reg.register(name, _tiny_model(name, hw, ch, seed=0))
+    srv = build_server(reg, ServerConfig(batch=4, stages=1, replicas=1))
+    frame = np.zeros((hw, hw, ch), np.float32)
+    assert srv.submit(name, frame).result(timeout=30) is not None
+
+    ev = srv.rescale(name, replicas=2)
+    assert ev["model"] == name
+    assert ev["before"]["replicas"] == 1
+    assert ev["after"]["replicas"] == 2
+    assert ev["compile_s"] >= 0 and ev["swap_s"] >= 0
+    assert ev["swapped_frontends"] >= 1
+    rt = srv.runtime(name)
+    assert getattr(rt.executor, "n_replicas", 1) == 2
+    assert rt.steady_fps > 0          # recalibrated on the new fleet
+
+    # The same frontend keeps serving on the rescaled executor.
+    assert srv.submit(name, frame).result(timeout=30) is not None
+    st = srv.stats()
+    assert st["models"][name]["replicas"] == 2
+    assert st["totals"]["submitted"] == 2
+    srv.close()
+
+
+def test_rescale_validation_errors():
+    reg = ProgramRegistry()
+    for name, hw, ch in ZOO[:2]:
+        reg.register(name, _tiny_model(name, hw, ch, seed=1))
+    srv = build_server(reg, ServerConfig(batch=4, stages=1))
+    try:
+        # Multi-model: the model must be named ...
+        with pytest.raises(ValueError, match="explicit model_id"):
+            srv.rescale(replicas=2)
+        # ... the id must exist ...
+        with pytest.raises(UnknownModelError):
+            srv.rescale("ghost", replicas=2)
+        # ... a no-op delta is a caller bug ...
+        name = ZOO[0][0]
+        with pytest.raises(ValueError, match="nothing to change"):
+            srv.rescale(name)
+        # ... and the micro-batch size is fleet-wide.
+        with pytest.raises(ValueError, match="fleet-wide"):
+            srv.rescale(name, batch=8)
+    finally:
+        srv.close()
+    with pytest.raises(RuntimeError):
+        srv.rescale(ZOO[0][0], replicas=2)   # closed server

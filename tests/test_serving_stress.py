@@ -381,3 +381,105 @@ def test_stage_death_mid_batch_resolves_every_request():
             if r.outcome == "completed":
                 # A real traversal: top-1 class id out of the tiny CNN.
                 assert int(np.asarray(r.result(timeout=1))) in range(10)
+
+
+def test_mid_stream_rescale_resolves_every_request():
+    """Elastic x stress: a *real* one-model server (tiny CNN, 2-stage
+    pipeline) under the full 8-producer flood while ``Server.rescale``
+    performs a live drain -> swap -> resume to 2 replicas mid-stream.
+    The zero-loss contract must hold across the swap: no producer or
+    request hangs, nothing is rejected because of the rescale, every
+    request resolves, outcome counts reconcile exactly, each producer's
+    requests are batched in its own submission order — and a
+    deadline-armed probe phase after the swap completes cleanly (armed
+    miss recovered on the rescaled fleet)."""
+    import jax
+
+    from repro.core import workload as W
+    from repro.core.program import compile_model
+    from repro.models import cnn
+    from repro.serving import ProgramRegistry, ServerConfig, build_server
+
+    m = W.CNNModel("tiny", 16, 4, (
+        W.ConvLayer("c1", 4, 8, 3),
+        W.ConvLayer("p1", 8, 8, 2, stride=2, kind="pool"),
+        W.ConvLayer("c2", 8, 8, 3, groups=2),
+        W.ConvLayer("fc", 8 * 8 * 8, 10, 1, kind="fc"),
+    ))
+    p = cnn.init_params(m, jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 4))
+    prog = compile_model(m, p, bits=8, calib_batch=calib)
+
+    reg = ProgramRegistry()
+    reg.register("tiny", prog)
+    srv = build_server(reg, ServerConfig(batch=4, stages=2, replicas=1))
+    fe = srv.open_frontend(400.0)
+    event = {}
+    rescale_errs: list[BaseException] = []
+
+    def rescaler():
+        # Let the flood establish itself, then swap under it. The
+        # compile + calibration happens while the old executor serves;
+        # only the drain/swap window pauses dispatch.
+        time.sleep(0.2)
+        try:
+            event.update(srv.rescale("tiny", replicas=2))
+        except BaseException as e:  # surfaced after join
+            rescale_errs.append(e)
+
+    def frame16(producer, i):
+        return np.full((16, 16, 4), (producer * 64 + i) % 7, np.float32)
+
+    t = threading.Thread(target=rescaler, name="rescaler")
+    t.start()
+    try:
+        reqs = _run_producers(
+            fe, lambda p_, i: fe.submit(frame16(p_, i), timeout=120))
+        for prod in range(N_PRODUCERS):
+            for r in reqs[prod]:
+                assert r._event.wait(timeout=120), "request hung"
+    finally:
+        t.join(timeout=120)
+    assert not t.is_alive(), "rescale hung"
+    assert not rescale_errs, f"rescale raised: {rescale_errs}"
+
+    # The swap happened mid-stream and is fully recorded.
+    assert event["before"]["replicas"] == 1
+    assert event["after"]["replicas"] == 2
+    assert event["swapped_frontends"] >= 1
+    assert getattr(srv.runtime("tiny").executor, "n_replicas", 1) == 2
+
+    # Armed probe on the rescaled fleet: a full batch of requests with
+    # an ample deadline must all complete — the estimator was rewarmed
+    # from the *new* plan's calibration, so admission must not refuse
+    # them and nothing may expire or arrive late.
+    probes = [fe.submit(frame16(0, i), deadline_ms=10_000.0,
+                        klass="post-swap", timeout=120)
+              for i in range(8)]
+    for r in probes:
+        assert r._event.wait(timeout=120), "post-swap probe hung"
+    fe.close()
+
+    total = N_PRODUCERS * N_FRAMES + len(probes)
+    st = fe.stats
+    assert st.submitted == total
+    assert st.hung == 0
+    assert st.resolved == total
+    # A rescale never rejects or fails a request: everything completed.
+    assert st.completed == total
+    assert st.failed == st.expired == st.rejected == st.rejected_wait == 0
+    post = st.klass("post-swap")
+    assert post.submitted == len(probes)
+    assert post.completed == len(probes)
+    assert post.late == 0, "armed miss did not recover post-swap"
+    for prod in range(N_PRODUCERS):
+        for r in reqs[prod]:
+            # Real traversals on both executors: top-1 out of the CNN.
+            assert int(np.asarray(r.result(timeout=1))) in range(10)
+        # Per-producer FIFO held across the swap: lanes stay FIFO and
+        # the parked batch re-dispatches before anything newer. (Done
+        # order is not asserted — post-swap batches route across 2
+        # replicas and may legally interleave.)
+        for a, b in zip(reqs[prod], reqs[prod][1:]):
+            assert a.t_batched <= b.t_batched
+    srv.close()
